@@ -1,0 +1,105 @@
+"""Kernel micro-benchmarks (jnp backends on CPU; the Pallas kernels are
+TPU-target and validated in interpret mode, which is not a timing mode).
+
+Reports us_per_call and derived throughput so regressions in the
+hot-path ops are visible run over run.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitmap import suffix_popcounts_np, popcount32_np
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_bitmap(n_pairs=4096, n_blocks=8, bw=128) -> List[str]:
+    rng = np.random.default_rng(0)
+    U = rng.integers(0, 2 ** 32, (n_pairs, n_blocks, bw),
+                     dtype=np.uint64).astype(np.uint32)
+    V = (U & rng.integers(0, 2 ** 32, U.shape, dtype=np.uint64)
+         .astype(np.uint32))
+    su = jnp.asarray(suffix_popcounts_np(U))
+    sv = jnp.asarray(suffix_popcounts_np(V))
+    rho = jnp.asarray(popcount32_np(U).reshape(n_pairs, -1)
+                      .sum(1).astype(np.int32))
+    Uj, Vj = jnp.asarray(U), jnp.asarray(V)
+    words = n_pairs * n_blocks * bw
+
+    out = []
+    dt = _timeit(lambda: ops.bitmap_intersect_full(Uj, Vj)[1])
+    out.append(f"kernels/bitmap_full/{n_pairs}x{n_blocks}x{bw},"
+               f"{dt*1e6:.0f},Gword_s={words/dt/1e9:.2f}")
+    dt = _timeit(lambda: ops.bitmap_intersect_es(
+        Uj, Vj, su, sv, rho, jnp.int32(64), mode="and")[1])
+    out.append(f"kernels/bitmap_es_metrics/{n_pairs}x{n_blocks}x{bw},"
+               f"{dt*1e6:.0f},Gword_s={words/dt/1e9:.2f}")
+    dt = _timeit(lambda: ops.screen_pairs(
+        Uj[:, 0], Vj[:, 0], su[:, 1], sv[:, 1], rho, jnp.int32(64))[0])
+    out.append(f"kernels/bitmap_screen/{n_pairs}x{bw},"
+               f"{dt*1e6:.0f},Gword_s={n_pairs*bw/dt/1e9:.2f}")
+    return out
+
+
+def bench_attention(B=2, S=1024, H=8, KH=2, D=64) -> List[str]:
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    flops = 4.0 * B * S * S * H * D / 2  # causal
+
+    from repro.models.layers import chunked_attention
+    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
+                                                  chunk=256))
+    dt = _timeit(f, q, k, v)
+    out = [f"kernels/chunked_attention/B{B}S{S}H{H},"
+           f"{dt*1e6:.0f},GFLOP_s={flops/dt/1e9:.1f}"]
+    dt = _timeit(jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, backend='jnp')), q, k, v)
+    out.append(f"kernels/attention_ref/B{B}S{S}H{H},"
+               f"{dt*1e6:.0f},GFLOP_s={flops/dt/1e9:.1f}")
+    return out
+
+
+def bench_embedding_bag(V=100_000, D=64, B=4096, L=50) -> List[str]:
+    rng = np.random.default_rng(2)
+    table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, V, (B, L)), jnp.int32)
+    mask = jnp.asarray(rng.random((B, L)) < 0.9)
+    f = jax.jit(lambda t, i, m: ops.embedding_bag(t, i, m, backend="jnp"))
+    dt = _timeit(f, table, ids, mask)
+    return [f"kernels/embedding_bag/V{V}D{D}B{B}L{L},"
+            f"{dt*1e6:.0f},Mlookup_s={B*L/dt/1e6:.1f}"]
+
+
+def bench_nlist(n_pairs=2048, lu=64, lv=64) -> List[str]:
+    rng = np.random.default_rng(3)
+    def mk(n, L):
+        pre = np.sort(rng.integers(0, 10_000, (n, L)).astype(np.int32), 1)
+        post = rng.integers(0, 10_000, (n, L)).astype(np.int32)
+        freq = rng.integers(1, 50, (n, L)).astype(np.int32)
+        return pre, post, freq
+    up, upo, uf = mk(n_pairs, lu)
+    vp, vpo, vf = mk(n_pairs, lv)
+    ul = np.full(n_pairs, lu, np.int32)
+    vl = np.full(n_pairs, lv, np.int32)
+    rho = vf.sum(1).astype(np.int32)
+    f = jax.jit(lambda *a: ops.nlist_intersect(*a, early_stop=True)[1])
+    dt = _timeit(f, up, upo, uf, vp, vpo, vf, ul, vl, rho, jnp.int32(100))
+    return [f"kernels/nlist_intersect/{n_pairs}x{lu},"
+            f"{dt*1e6:.0f},Mpair_s={n_pairs/dt/1e6:.2f}"]

@@ -1,0 +1,65 @@
+"""Benchmark harness: one section per paper table/figure + kernel micro.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` limits the paper
+sweep to the two largest minsups per dataset (the full ladder is the
+``--full`` mode used for EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all 4 minsup levels on all 9 datasets")
+    ap.add_argument("--datasets", default="",
+                    help="comma-separated replica names (default: all)")
+    ap.add_argument("--sections", default="paper,kernels,retrieval")
+    ap.add_argument("--retrieval-c", type=int, default=250_000)
+    args = ap.parse_args()
+    sections = set(args.sections.split(","))
+
+    print("name,us_per_call,derived")
+    lines = []
+
+    if "paper" in sections:
+        from benchmarks.bench_paper import run_dataset, csv_rows, \
+            table_iv, figures
+        from repro.data import make_dataset, DATASET_REPLICAS
+        names = (args.datasets.split(",") if args.datasets
+                 else list(DATASET_REPLICAS))
+        all_rows = []
+        for name in names:
+            _, minsups = make_dataset(name)
+            levels = minsups[1:] if args.full else minsups[2:]
+            rows = run_dataset(name, levels)
+            all_rows.extend(rows)
+            for line in csv_rows(rows):
+                print(line)
+        print("\n# Table IV analogue", file=sys.stderr)
+        print(table_iv(all_rows), file=sys.stderr)
+        print("\n# Figures 7-15 analogue", file=sys.stderr)
+        print(figures(all_rows), file=sys.stderr)
+
+    if "kernels" in sections:
+        from benchmarks.bench_kernels import (bench_bitmap, bench_attention,
+                                              bench_embedding_bag,
+                                              bench_nlist)
+        for line in (bench_bitmap() + bench_attention()
+                     + bench_embedding_bag() + bench_nlist()):
+            print(line)
+
+    if "retrieval" in sections:
+        from benchmarks.bench_retrieval import run as bench_retrieval
+        for line in bench_retrieval(C=args.retrieval_c):
+            print(line)
+
+    for line in lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end LM training driver: a scaled-down qwen-family model trained
+for a few hundred steps on the synthetic bigram stream, with checkpoints
+and restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --resume
+
+The model is the qwen1.5 architecture (QKV bias, tied embeddings) at
+~14M params so a few hundred steps are CPU-feasible; the same driver
+runs the full configs on real hardware.  Loss must drop well below
+ln(vocab) (the stream has 0.7-bigram structure => achievable CE ~2.2).
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+import argparse                                               # noqa: E402
+import dataclasses                                            # noqa: E402
+
+from repro.configs import get_arch                            # noqa: E402
+from repro.launch.train import train_lm                       # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    spec = get_arch("qwen1.5-0.5b")
+    cfg = dataclasses.replace(
+        spec.config_fn(None),
+        name="qwen1.5-mini",
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=8, d_head=32,
+        d_ff=704, vocab_size=8192,
+        dtype="float32", remat="none", attn_chunk=128)
+
+    out = train_lm(cfg, steps=args.steps, batch=args.batch,
+                   seq_len=args.seq_len, lr=3e-3,
+                   ckpt_dir=args.ckpt_dir, resume=args.resume,
+                   ckpt_every=50)
+    first = out["history"][0][1] if out["history"] else float("nan")
+    final = out["final"]["loss"]
+    print(f"\nloss: {first:.3f} -> {final:.3f} "
+          f"(uniform baseline ln(8192) = 9.01)")
+    assert final < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Architecture registry: ``--arch <id>`` resolution for every driver."""
+
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (  # noqa: F401
+    ArchSpec, ShapeDef, FAMILY_SHAPES, LM_SHAPES, GNN_SHAPES,
+    RECSYS_SHAPES, FIM_SHAPES,
+)
+
+from repro.configs import (
+    command_r_plus_104b, qwen1_5_0_5b, granite_3_8b, deepseek_v2_236b,
+    mixtral_8x22b, graphsage_reddit, sasrec, din, xdeepfm,
+    two_tower_retrieval, fim_eclat,
+)
+
+# The 10 assigned architectures + the paper's own workload.
+REGISTRY: Dict[str, ArchSpec] = {
+    spec.arch_id: spec for spec in (
+        command_r_plus_104b.SPEC,
+        qwen1_5_0_5b.SPEC,
+        granite_3_8b.SPEC,
+        deepseek_v2_236b.SPEC,
+        mixtral_8x22b.SPEC,
+        graphsage_reddit.SPEC,
+        sasrec.SPEC,
+        din.SPEC,
+        xdeepfm.SPEC,
+        two_tower_retrieval.SPEC,
+        fim_eclat.SPEC,
+    )
+}
+
+ASSIGNED_ARCHS: Tuple[str, ...] = tuple(
+    a for a in REGISTRY if REGISTRY[a].family != "fim")
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    try:
+        return REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+
+
+def get_shape(spec: ArchSpec, shape_id: str) -> ShapeDef:
+    return FAMILY_SHAPES[spec.family][shape_id]
+
+
+def all_cells(include_fim: bool = True) -> List[Tuple[str, str]]:
+    """Every (arch_id, shape_id) pair — 40 assigned + optional FIM extras."""
+    cells = []
+    for arch_id, spec in REGISTRY.items():
+        if spec.family == "fim" and not include_fim:
+            continue
+        for shape_id in spec.shape_ids:
+            cells.append((arch_id, shape_id))
+    return cells

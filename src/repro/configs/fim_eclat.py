@@ -1,0 +1,30 @@
+"""The paper's own workload as a dry-run architecture: one distributed
+Eclat mining round (screen + count, count-distribution over TID blocks).
+
+Not one of the 40 assigned cells — an EXTRA pair of cells proving the
+paper's technique itself lowers and shards on the production meshes.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, FIM_SHAPES
+
+
+@dataclasses.dataclass(frozen=True)
+class FIMConfig:
+    name: str = "fim-eclat"
+    scheme: str = "eclat"
+    early_stop: bool = True
+    block_words: int = 128
+
+
+SPEC = ArchSpec(
+    arch_id="fim-eclat",
+    family="fim",
+    source="this paper (Nguyen 2019) + Zaki KDD'97 (Eclat)",
+    config_fn=lambda shape_id=None: FIMConfig(),
+    smoke_config_fn=lambda: FIMConfig(name="fim-smoke", block_words=2),
+    shape_ids=tuple(FIM_SHAPES),
+    rules_override={},
+    notes="mine_1g: 1.07B transactions, 1TB bitmap store on one pod.",
+)

@@ -1,0 +1,158 @@
+"""Bitmap vertical format for TID-lists — the TPU-native data layout.
+
+The paper's sorted-int TID-lists are pointer-chasing merges; on TPU we
+re-represent every TID-list as a packed bitmap row so that intersection is
+``AND`` + popcount (pure 8x128-lane VPU work) and dEclat's difference is
+``ANDNOT``.  The early-stopping criterion survives the translation at block
+granularity via per-row *suffix popcount* tables (see DESIGN.md §2).
+
+Layout
+------
+``bitmaps: uint32[n_items, n_blocks, block_words]``
+    bit ``b`` of word ``w`` of block ``k`` of row ``i``  ⇔  transaction
+    ``(k*block_words + w) * 32 + b`` contains item ``i``.  TIDs here are
+    0-based (the oracle is 1-based to match the paper's prose).
+``suffix: int32[n_items, n_blocks + 1]``
+    ``suffix[i, k] = popcount(bitmaps[i, k:, :])`` — the mass still
+    achievable from block ``k`` onward.  ``suffix[i, 0]`` is the support.
+
+``block_words`` defaults to 128 words = 4096 transactions per block so a
+block is exactly one 8x128 VPU-aligned uint32 tile row-group.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Hashable, List, Sequence, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+WORD_BITS = 32
+DEFAULT_BLOCK_WORDS = 128  # 4096 TIDs per block; one lane-aligned tile.
+
+# Padding sentinel for N-list arrays (shared by core.prepost and
+# kernels.ref; lives here to keep the import graph acyclic).
+NL_SENTINEL = np.iinfo(np.int32).max
+
+
+def popcount32(x: jnp.ndarray) -> jnp.ndarray:
+    """SWAR population count for uint32 arrays (returns int32)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def popcount32_np(x: np.ndarray) -> np.ndarray:
+    """Host-side popcount (numpy mirror of :func:`popcount32`)."""
+    x = x.astype(np.uint32)
+    x = x - ((x >> 1) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> 2) & np.uint32(0x33333333))
+    x = (x + (x >> 4)) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> 24).astype(np.int32)
+
+
+def pack_tidlists(tidlists: Sequence[Sequence[int]], n_trans: int,
+                  block_words: int = DEFAULT_BLOCK_WORDS,
+                  ) -> np.ndarray:
+    """Pack 0-based TID lists into ``uint32[n_rows, n_blocks, block_words]``."""
+    n_rows = len(tidlists)
+    n_words = -(-n_trans // WORD_BITS)
+    n_blocks = max(1, -(-n_words // block_words))
+    flat = np.zeros((n_rows, n_blocks * block_words), dtype=np.uint32)
+    for r, tids in enumerate(tidlists):
+        if len(tids) == 0:
+            continue
+        t = np.asarray(tids, dtype=np.int64)
+        if t.min() < 0 or t.max() >= n_trans:
+            raise ValueError("TID out of range")
+        np.bitwise_or.at(flat[r], t // WORD_BITS,
+                         np.uint32(1) << (t % WORD_BITS).astype(np.uint32))
+    return flat.reshape(n_rows, n_blocks, block_words)
+
+
+def unpack_row(row: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_tidlists` for one row -> sorted 0-based TIDs."""
+    flat = np.asarray(row, dtype=np.uint32).reshape(-1)
+    bits = np.unpackbits(flat.view(np.uint8), bitorder="little")
+    return np.nonzero(bits)[0].astype(np.int64)
+
+
+def suffix_popcounts_np(bitmaps: np.ndarray) -> np.ndarray:
+    """``int32[n_rows, n_blocks+1]`` suffix popcount table (host)."""
+    per_block = popcount32_np(bitmaps).sum(axis=-1)          # (rows, blocks)
+    n_rows, n_blocks = per_block.shape
+    out = np.zeros((n_rows, n_blocks + 1), dtype=np.int32)
+    out[:, :-1] = per_block[:, ::-1].cumsum(axis=1)[:, ::-1]
+    return out
+
+
+def suffix_popcounts(bitmaps: jnp.ndarray) -> jnp.ndarray:
+    """Device version of :func:`suffix_popcounts_np`."""
+    per_block = popcount32(bitmaps).sum(axis=-1).astype(jnp.int32)
+    rev = jnp.cumsum(per_block[:, ::-1], axis=1)[:, ::-1]
+    zeros = jnp.zeros((bitmaps.shape[0], 1), dtype=jnp.int32)
+    return jnp.concatenate([rev, zeros], axis=1)
+
+
+@dataclass
+class BitmapDB:
+    """A transaction database packed for device mining.
+
+    Rows are the frequent 1-itemsets in *increasing* frequency (the
+    Eclat/dEclat search order from the paper §II-A).
+    """
+
+    items: List[Hashable]                 # row -> original item
+    bitmaps: np.ndarray                   # uint32 (n_items, n_blocks, bw)
+    supports: np.ndarray                  # int32 (n_items,)
+    n_trans: int
+    minsup: int
+    block_words: int
+
+    @property
+    def n_items(self) -> int:
+        return len(self.items)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.bitmaps.shape[1]
+
+    @classmethod
+    def from_db(cls, db: Sequence[Sequence[Hashable]], minsup: int,
+                block_words: int = DEFAULT_BLOCK_WORDS) -> "BitmapDB":
+        from .oracle import frequent_items_ascending
+
+        items = frequent_items_ascending(db, minsup)
+        index: Dict[Hashable, int] = {it: r for r, it in enumerate(items)}
+        tidlists: List[List[int]] = [[] for _ in items]
+        for tid, t in enumerate(db):
+            for it in set(t):
+                r = index.get(it)
+                if r is not None:
+                    tidlists[r].append(tid)
+        bitmaps = pack_tidlists(tidlists, max(len(db), 1), block_words)
+        supports = np.array([len(t) for t in tidlists], dtype=np.int32)
+        return cls(items=items, bitmaps=bitmaps, supports=supports,
+                   n_trans=len(db), minsup=minsup, block_words=block_words)
+
+
+def pad_pairs(ia: np.ndarray, ib: np.ndarray, bucket_sizes: Sequence[int],
+              ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Pad pair index vectors to the smallest bucket >= n (stable jit shapes).
+
+    Padding replicates pair 0 (harmless: results beyond ``n`` are dropped by
+    the caller).  Returns (ia_padded, ib_padded, n_valid)."""
+    n = int(ia.shape[0])
+    for b in bucket_sizes:
+        if n <= b:
+            pad = b - n
+            if pad:
+                ia = np.concatenate([ia, np.zeros(pad, ia.dtype)])
+                ib = np.concatenate([ib, np.zeros(pad, ib.dtype)])
+            return ia, ib, n
+    raise ValueError(f"pair batch of {n} exceeds largest bucket "
+                     f"{max(bucket_sizes)}; raise pair_chunk")

@@ -1,0 +1,162 @@
+"""Device PrePost+: batched N-list intersection with early stopping.
+
+The PPC-tree build is inherently sequential host preprocessing (one pass
+over the reordered transactions — same category as tokenisation) and is
+shared with the oracle (``oracle.PPCTree``).  The search itself batches all
+extensions of one class member into a single vmapped two-pointer merge on
+the device (kernels/ops.nlist_intersect), carrying the paper's
+``rho_V - skip`` early-stopping criterion (with the Z-mass erratum fix, see
+core/oracle.py) inside the ``lax.while_loop`` guard.
+
+N-lists are short by construction — that is PrePost+'s selling point — so
+the padded-batch layout wastes little and the sequential merge depth is
+small.  Comparison counts reported by the device path are exactly the
+oracle's (same merge, same abort points); tests assert equality.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Hashable, List, Sequence, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.oracle import PPCTree, MiningStats
+from repro.kernels import ops
+from repro.core.bitmap import NL_SENTINEL
+
+ItemsetSupports = Dict[FrozenSet[Hashable], int]
+
+_LEN_BUCKETS = (8, 32, 128, 512, 2048, 8192, 32768)
+
+
+def _pad_len(n: int) -> int:
+    for b in _LEN_BUCKETS:
+        if n <= b:
+            return b
+    raise ValueError(f"N-list of length {n} exceeds largest bucket")
+
+
+@dataclass
+class _Member:
+    itemset: Tuple[Hashable, ...]
+    pre: np.ndarray    # int32 (len,)
+    post: np.ndarray
+    freq: np.ndarray
+    support: int
+
+
+class DevicePrePost:
+    """PrePost+ with device-batched NL intersection."""
+
+    def __init__(self, early_stop: bool = True, pair_chunk: int = 8192,
+                 backend: str = "auto"):
+        self.early_stop = early_stop
+        self.pair_chunk = pair_chunk
+        self.backend = backend
+
+    def mine(self, db: Sequence[Sequence[Hashable]], minsup: int,
+             ) -> Tuple[ItemsetSupports, MiningStats]:
+        if minsup < 1:
+            raise ValueError("minsup must be an absolute count >= 1")
+        stats = MiningStats()
+        t0 = time.perf_counter()
+
+        tree = PPCTree(db, minsup)
+        order_asc = list(reversed(tree.order_desc))
+        out: ItemsetSupports = {}
+        members: List[_Member] = []
+        for it in order_asc:
+            codes = tree.nlists[it]
+            out[frozenset((it,))] = tree.item_support[it]
+            stats.nodes += 1
+            arr = np.asarray(codes, np.int32).reshape(-1, 3)
+            members.append(_Member(
+                itemset=(it,), pre=arr[:, 0], post=arr[:, 1],
+                freq=arr[:, 2], support=tree.item_support[it]))
+
+        self._minsup = minsup
+        self._traverse(members, out, stats)
+        stats.runtime_s = time.perf_counter() - t0
+        return out, stats
+
+    def _traverse(self, klass: List[_Member], out: ItemsetSupports,
+                  stats: MiningStats) -> None:
+        for a in range(len(klass)):
+            siblings = klass[a + 1:]
+            if not siblings:
+                continue
+            children: List[_Member] = []
+            for lo in range(0, len(siblings), self.pair_chunk):
+                children.extend(self._extend_chunk(
+                    klass[a], siblings[lo:lo + self.pair_chunk], stats))
+            for ch in children:
+                out[frozenset(ch.itemset)] = ch.support
+                stats.nodes += 1
+            if children:
+                self._traverse(children, out, stats)
+
+    def _extend_chunk(self, xs: _Member, chunk: List[_Member],
+                      stats: MiningStats) -> List[_Member]:
+        n = len(chunk)
+        stats.candidates += n
+        lu = _pad_len(len(xs.pre))
+        lv = _pad_len(max(len(s.pre) for s in chunk))
+
+        def pad(vec: np.ndarray, L: int, fill: int) -> np.ndarray:
+            o = np.full((L,), fill, np.int32)
+            o[:len(vec)] = vec
+            return o
+
+        u_pre = np.broadcast_to(pad(xs.pre, lu, NL_SENTINEL), (n, lu))
+        u_post = np.broadcast_to(pad(xs.post, lu, 0), (n, lu))
+        u_freq = np.broadcast_to(pad(xs.freq, lu, 0), (n, lu))
+        v_pre = np.stack([pad(s.pre, lv, NL_SENTINEL) for s in chunk])
+        v_post = np.stack([pad(s.post, lv, 0) for s in chunk])
+        v_freq = np.stack([pad(s.freq, lv, 0) for s in chunk])
+        u_len = np.full((n,), len(xs.pre), np.int32)
+        v_len = np.array([len(s.pre) for s in chunk], np.int32)
+        rho_v = np.array([s.support for s in chunk], np.int32)
+
+        out_slot, support, cmps, alive = ops.nlist_intersect(
+            jnp.asarray(u_pre), jnp.asarray(u_post), jnp.asarray(u_freq),
+            jnp.asarray(v_pre), jnp.asarray(v_post), jnp.asarray(v_freq),
+            jnp.asarray(u_len), jnp.asarray(v_len), jnp.asarray(rho_v),
+            jnp.int32(self._minsup), early_stop=self.early_stop,
+            backend=self.backend)
+        out_slot = np.asarray(out_slot)
+        support = np.asarray(support)
+        stats.comparisons += int(np.asarray(cmps).sum())
+        stats.es_aborts += int((~np.asarray(alive)).sum())
+
+        children: List[_Member] = []
+        for b in range(n):
+            if support[b] < self._minsup:
+                continue
+            # Reconstruct the child N-list: slot i of U matched V-code
+            # out_slot[b, i]; merge consecutive slots sharing a V-code
+            # (Alg. 3 line 31 "merge elements in Z").
+            slots = out_slot[b, :len(xs.pre)]
+            matched = slots != NL_SENTINEL
+            js = slots[matched]
+            fs = xs.freq[:len(xs.pre)][matched]
+            if js.size == 0:
+                continue
+            # group-by consecutive equal j (js is non-decreasing: two-pointer)
+            boundaries = np.nonzero(np.diff(js))[0] + 1
+            groups = np.split(np.arange(js.size), boundaries)
+            z_pre = np.array([v_pre[b, js[g[0]]] for g in groups], np.int32)
+            z_post = np.array([v_post[b, js[g[0]]] for g in groups], np.int32)
+            z_freq = np.array([fs[g].sum() for g in groups], np.int32)
+            children.append(_Member(
+                itemset=xs.itemset + (chunk[b].itemset[-1],),
+                pre=z_pre, post=z_post, freq=z_freq,
+                support=int(support[b])))
+        return children
+
+
+def mine_prepost_device(db, minsup, early_stop: bool = True, **kw):
+    return DevicePrePost(early_stop=early_stop, **kw).mine(db, minsup)

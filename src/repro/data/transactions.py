@@ -1,0 +1,182 @@
+"""Synthetic transaction databases replicating the paper's nine datasets.
+
+The paper evaluates on FIMI/KONECT datasets (T40I10D100K, MovieLens-1M,
+Github, Retail, Kosarak, Accidents, Chess, Connect, Pumsb).  This
+container is offline, so we generate *statistical replicas*: same
+generative family, matched #items / avg transaction length / density
+regime, scaled so benchmarks run in minutes on one CPU core.  What the
+paper's experiments depend on is the **candidate/node ratio** regime
+(Table IV) — sparse high-ratio data (big ES wins) vs dense low-ratio data
+(neutral) — which these generators reproduce by construction.
+
+Generators
+----------
+``gen_quest``          IBM Quest-style market baskets (T40I10D100K family)
+``gen_powerlaw_baskets`` power-law item popularity (Retail/Kosarak family)
+``gen_bipartite``      user x item memberships (MovieLens/Github family)
+``gen_dense_tabular``  categorical-attribute rows (Chess/Connect/Pumsb
+                       family: every transaction has one item per column,
+                       few columns, heavy co-occurrence => dense, ratio~1)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+Database = List[List[int]]
+
+
+def gen_quest(n_trans: int = 2000, n_items: int = 200,
+              avg_trans_len: int = 12, avg_pat_len: int = 4,
+              n_patterns: int = 60, corruption: float = 0.3,
+              seed: int = 0) -> Database:
+    """Simplified IBM Quest generator (Agrawal & Srikant, VLDB'94).
+
+    Potentially-frequent patterns are drawn with exponentially distributed
+    sizes and power-law weights; each transaction is assembled from
+    patterns (with per-item corruption) until its target length is met.
+    """
+    rng = np.random.default_rng(seed)
+    pat_sizes = np.maximum(1, rng.poisson(avg_pat_len, n_patterns))
+    patterns = [rng.choice(n_items, size=min(s, n_items), replace=False)
+                for s in pat_sizes]
+    weights = rng.pareto(1.5, n_patterns) + 1e-3
+    weights /= weights.sum()
+    trans_lens = np.maximum(1, rng.poisson(avg_trans_len, n_trans))
+
+    db: Database = []
+    for t in range(n_trans):
+        target = trans_lens[t]
+        items: set = set()
+        guard = 0
+        while len(items) < target and guard < 40:
+            guard += 1
+            p = patterns[rng.choice(n_patterns, p=weights)]
+            kept = p[rng.random(len(p)) >= corruption]
+            items.update(int(i) for i in kept)
+        if not items:
+            items = {int(rng.integers(n_items))}
+        db.append(sorted(items))
+    return db
+
+
+def gen_powerlaw_baskets(n_trans: int = 3000, n_items: int = 800,
+                         avg_trans_len: float = 10.0, alpha: float = 1.3,
+                         seed: int = 0) -> Database:
+    """Retail/Kosarak-style baskets: Zipfian item popularity, variable
+    lengths, weak correlation => very high candidate/node ratio."""
+    rng = np.random.default_rng(seed)
+    pop = 1.0 / np.arange(1, n_items + 1) ** alpha
+    pop /= pop.sum()
+    lens = np.maximum(1, rng.poisson(avg_trans_len, n_trans))
+    db: Database = []
+    for t in range(n_trans):
+        k = min(int(lens[t]), n_items)
+        items = rng.choice(n_items, size=k, replace=False, p=pop)
+        db.append(sorted(int(i) for i in items))
+    return db
+
+
+def gen_bipartite(n_users: int = 1500, n_items: int = 600,
+                  avg_degree: float = 20.0, user_skew: float = 1.1,
+                  item_skew: float = 1.2, seed: int = 0) -> Database:
+    """MovieLens/Github-style bipartite memberships: transactions are
+    users, items are movies/projects; both sides heavy-tailed."""
+    rng = np.random.default_rng(seed)
+    u_w = rng.pareto(user_skew, n_users) + 0.1
+    deg = np.maximum(1, (u_w / u_w.mean() * avg_degree)).astype(int)
+    deg = np.minimum(deg, n_items)
+    pop = 1.0 / np.arange(1, n_items + 1) ** item_skew
+    pop /= pop.sum()
+    db: Database = []
+    for u in range(n_users):
+        items = rng.choice(n_items, size=deg[u], replace=False, p=pop)
+        db.append(sorted(int(i) for i in items))
+    return db
+
+
+def gen_dense_tabular(n_trans: int = 1000, n_cols: int = 12,
+                      vals_per_col: int = 4, skew: float = 2.0,
+                      correlation: float = 0.9, n_classes: int = 3,
+                      seed: int = 0) -> Database:
+    """Chess/Connect/Pumsb-style data: one item per categorical column.
+
+    Columns are CORRELATED through a latent class (board positions /
+    census fields are strongly dependent): each row draws a class and
+    each column takes the class's value w.p. ``correlation``, else a
+    skewed random value.  That co-occurrence structure is what drives the
+    paper's dense regime — candidate/node ratio ~ 1 (nearly every
+    proposed candidate is frequent, leaving ES nothing to abort)."""
+    rng = np.random.default_rng(seed)
+    db: Database = []
+    col_dists = []
+    for c in range(n_cols):
+        w = rng.pareto(skew, vals_per_col) + 0.2
+        col_dists.append(w / w.sum())
+    class_vals = rng.integers(0, vals_per_col, size=(n_classes, n_cols))
+    class_p = rng.dirichlet(np.full(n_classes, 2.0))
+    for t in range(n_trans):
+        k = rng.choice(n_classes, p=class_p)
+        row = []
+        for c in range(n_cols):
+            if rng.random() < correlation:
+                v = int(class_vals[k, c])
+            else:
+                v = int(rng.choice(vals_per_col, p=col_dists[c]))
+            row.append(c * vals_per_col + v)
+        db.append(row)
+    return db
+
+
+# Paper Table III analogues (scaled ~20-100x down; relative minsups kept in
+# the same regime so the candidate/node ratio matches each dataset family).
+DATASET_REPLICAS: Dict[str, Tuple[str, dict, List[float]]] = {
+    # name: (generator, kwargs, relative minsup ladder — 4 values like the
+    # paper's minSup_1..minSup_4, smallest first)
+    "t40-like":      ("quest", dict(n_trans=4000, n_items=300,
+                                    avg_trans_len=16, avg_pat_len=6,
+                                    n_patterns=80), [0.005, 0.01, 0.02, 0.04]),
+    "movielens-like": ("bipartite", dict(n_users=1200, n_items=400,
+                                         avg_degree=40), [0.07, 0.08, 0.09, 0.10]),
+    # NOTE: the ladder sits above the clique blow-up knee of this replica
+    # (F explodes >10^7 below minsup~20 — popular-project co-membership);
+    # the paper's absolute-runtime regime maps to these relative levels.
+    "github-like":   ("bipartite", dict(n_users=4000, n_items=1500,
+                                        avg_degree=4, item_skew=1.05),
+                      [0.006, 0.007, 0.009, 0.012]),
+    "retail-like":   ("powerlaw", dict(n_trans=4000, n_items=1200,
+                                       avg_trans_len=10), [0.001, 0.0015, 0.002, 0.003]),
+    "kosarak-like":  ("powerlaw", dict(n_trans=6000, n_items=1600,
+                                       avg_trans_len=8, alpha=1.6),
+                      [0.002, 0.004, 0.008, 0.012]),
+    "accidents-like": ("dense", dict(n_trans=2500, n_cols=11,
+                                     vals_per_col=5, skew=1.6),
+                       [0.28, 0.32, 0.38, 0.44]),
+    "chess-like":    ("dense", dict(n_trans=1000, n_cols=12,
+                                    vals_per_col=3, skew=2.5),
+                      [0.45, 0.5, 0.55, 0.6]),
+    "connect-like":  ("dense", dict(n_trans=2000, n_cols=14,
+                                    vals_per_col=3, skew=3.0),
+                      [0.5, 0.55, 0.6, 0.65]),
+    "pumsb-like":    ("dense", dict(n_trans=1500, n_cols=15,
+                                    vals_per_col=6, skew=1.8),
+                      [0.28, 0.32, 0.38, 0.44]),
+}
+
+_GENS = {
+    "quest": gen_quest,
+    "powerlaw": gen_powerlaw_baskets,
+    "bipartite": gen_bipartite,
+    "dense": gen_dense_tabular,
+}
+
+
+def make_dataset(name: str, seed: int = 0) -> Tuple[Database, List[int]]:
+    """Returns (db, minsup ladder as absolute counts, smallest first)."""
+    gen_name, kwargs, rels = DATASET_REPLICAS[name]
+    db = _GENS[gen_name](seed=seed, **kwargs)
+    n = len(db)
+    minsups = [max(1, int(round(r * n))) for r in rels]
+    return db, minsups

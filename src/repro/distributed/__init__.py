@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules, use_rules, current_rules, logical_spec, constrain,
+    make_param_shardings, DEFAULT_RULES, MULTI_POD_RULES,
+)
+from repro.distributed.compression import (  # noqa: F401
+    quantize_int8, dequantize_int8, compressed_psum_int8, ErrorFeedback,
+)

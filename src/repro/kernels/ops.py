@@ -1,0 +1,114 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``backend`` selection:
+  * ``"jnp"``      — the pure-jnp reference path (kernels/ref.py).  This is
+                     the production path on CPU hosts and the oracle for
+                     kernel tests.
+  * ``"pallas"``   — the Pallas kernel; interpret mode is picked
+                     automatically when no TPU is attached.
+  * ``"auto"``     — pallas on TPU, jnp elsewhere (default).
+
+All wrappers keep shapes static-friendly: callers pad pair batches to
+bucketed sizes (core/bitmap.py::pad_pairs) so jit caches stay small.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .bitmap_intersect import bitmap_intersect_es as _pallas_bitmap
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "jnp"
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+def bitmap_intersect_es(U, V, suffix_u, suffix_v, rho_parent, minsup,
+                        *, mode: str = "and", backend: str = "auto",
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                   jnp.ndarray, jnp.ndarray]:
+    """Blocked early-stopping intersection.  See kernels/ref.py for the
+    exact semantics.  Returns (Z, counts, blocks_done, alive)."""
+    b = _resolve(backend)
+    if b == "pallas":
+        return _pallas_bitmap(U, V, suffix_u, suffix_v, rho_parent, minsup,
+                              mode=mode, interpret=not _on_tpu())
+    return _ref.bitmap_intersect_es_ref(U, V, suffix_u, suffix_v,
+                                        rho_parent, minsup, mode=mode)
+
+
+def bitmap_intersect_full(U, V, *, mode: str = "and",
+                          backend: str = "auto"):
+    """Fused full intersection (Z, counts) without block metrics."""
+    del backend
+    return _ref.bitmap_intersect_full_ref(U, V, mode=mode)
+
+
+def bitmap_count(U, V, *, backend: str = "auto") -> jnp.ndarray:
+    """Support counting without ES and without materialising Z."""
+    # The jnp path is already a single fused AND+popcount+reduce; the
+    # pallas path reuses the ES kernel with minsup=0 (never aborts).
+    b = _resolve(backend)
+    if b == "pallas":
+        n_pairs, n_blocks, _ = U.shape
+        zeros = jnp.zeros((n_pairs, n_blocks + 1), jnp.int32)
+        rho = jnp.zeros((n_pairs,), jnp.int32)
+        _, cnt, _, _ = _pallas_bitmap(U, V, zeros, zeros, rho,
+                                      jnp.int32(0), mode="and",
+                                      interpret=not _on_tpu())
+        return cnt
+    return _ref.bitmap_count_ref(U, V)
+
+
+def screen_pairs(first_u, first_v, suffix1_u, suffix1_v, rho_parent, minsup,
+                 *, mode: str = "and", backend: str = "auto"):
+    """One-block screening bound (inter-call early stopping)."""
+    del backend  # single cheap fused op; jnp path is optimal everywhere
+    return _ref.screen_pairs_ref(first_u, first_v, suffix1_u, suffix1_v,
+                                 rho_parent, minsup, mode=mode)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, softmax_scale=None,
+                    backend: str = "auto"):
+    """Fused attention: Pallas kernel on TPU, dense ref elsewhere."""
+    b = _resolve(backend)
+    if b == "pallas":
+        from .flash_attention import flash_attention as _fa
+        return _fa(q, k, v, causal=causal, softmax_scale=softmax_scale,
+                   interpret=not _on_tpu())
+    return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                    softmax_scale=softmax_scale)
+
+
+def embedding_bag(table, ids, mask, *, combiner: str = "mean",
+                  backend: str = "auto"):
+    """Fused EmbeddingBag: Pallas on TPU, take+reduce elsewhere."""
+    b = _resolve(backend)
+    if b == "pallas":
+        from .segment_embed import embedding_bag as _eb
+        return _eb(table, ids, mask, combiner=combiner,
+                   interpret=not _on_tpu())
+    return _ref.embedding_bag_ref(table, ids, mask, combiner=combiner)
+
+
+def nlist_intersect(u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+                    u_len, v_len, rho_v, minsup, *, early_stop: bool = True,
+                    backend: str = "auto"):
+    """Batched padded N-list intersection (PrePost+ device path)."""
+    del backend  # sequential merge: the vmapped while_loop IS the kernel
+    return _ref.nlist_intersect_ref(u_pre, u_post, u_freq,
+                                    v_pre, v_post, v_freq,
+                                    u_len, v_len, rho_v, minsup,
+                                    early_stop=early_stop)

@@ -1,0 +1,231 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the exact semantics its kernel must
+reproduce bit-for-bit (integer kernels) or within tolerance (float
+kernels).  The refs are also the *production CPU path*: on hosts without
+a TPU the miners and models call these (they are fully vectorized jnp),
+while ``ops.py`` routes to the Pallas kernels on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitmap import popcount32, NL_SENTINEL as _NL
+
+# ---------------------------------------------------------------------------
+# Blocked early-stopping bitmap intersection (Eclat "and" / dEclat "andnot")
+# ---------------------------------------------------------------------------
+#
+# Semantics (shared with kernels/bitmap_intersect.py):
+#   * blocks are processed in order; a pair is "alive" until its ES bound
+#     drops below minsup;
+#   * block k's output/count/work are produced iff the pair is alive at the
+#     START of block k;
+#   * counts freeze at death (a dead pair is *provably* infrequent, its
+#     partial count is never interpreted as a support);
+#   * mode "and":    Z = U & V,  bound_k = count_k + min(sufU[k+1], sufV[k+1])
+#   * mode "andnot": Z = U & ~V, bound_k = rho_parent - count_k
+#     (dEclat: support(Pxy) = rho(Px) - |D(Pxy)| decreases as diffs emit)
+#   * minsup <= 0 disables early stopping (the non-ES baselines).
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def bitmap_intersect_es_ref(
+    U: jnp.ndarray,            # uint32 (n_pairs, n_blocks, bw)
+    V: jnp.ndarray,            # uint32 (n_pairs, n_blocks, bw)
+    suffix_u: jnp.ndarray,     # int32  (n_pairs, n_blocks + 1)
+    suffix_v: jnp.ndarray,     # int32  (n_pairs, n_blocks + 1)
+    rho_parent: jnp.ndarray,   # int32  (n_pairs,)  (used by "andnot")
+    minsup: jnp.ndarray,       # int32  scalar
+    *,
+    mode: str = "and",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (Z, counts, blocks_done, alive_final)."""
+    if mode not in ("and", "andnot"):
+        raise ValueError(f"bad mode {mode!r}")
+    n_pairs, n_blocks, _ = U.shape
+    minsup = jnp.asarray(minsup, jnp.int32)
+
+    u_t = jnp.swapaxes(U, 0, 1)                     # (nb, n_pairs, bw)
+    v_t = jnp.swapaxes(V, 0, 1)
+    su_next = jnp.swapaxes(suffix_u[:, 1:], 0, 1)   # (nb, n_pairs)
+    sv_next = jnp.swapaxes(suffix_v[:, 1:], 0, 1)
+
+    def step(carry, xs):
+        cnt, alive, blocks = carry
+        u_k, v_k, su_k, sv_k = xs
+        z_k = u_k & (v_k if mode == "and" else ~v_k)
+        pc = popcount32(z_k).sum(axis=-1)
+        cnt_new = jnp.where(alive, cnt + pc, cnt)
+        blocks = blocks + alive.astype(jnp.int32)
+        if mode == "and":
+            bound = cnt_new + jnp.minimum(su_k, sv_k)
+        else:
+            bound = rho_parent.astype(jnp.int32) - cnt_new
+        alive_new = jnp.logical_and(alive, bound >= minsup)
+        z_out = jnp.where(alive[:, None], z_k, jnp.uint32(0))
+        return (cnt_new, alive_new, blocks), z_out
+
+    init = (jnp.zeros((n_pairs,), jnp.int32),
+            jnp.ones((n_pairs,), jnp.bool_),
+            jnp.zeros((n_pairs,), jnp.int32))
+    (cnt, alive, blocks), z_stack = jax.lax.scan(
+        step, init, (u_t, v_t, su_next, sv_next))
+    Z = jnp.swapaxes(z_stack, 0, 1)
+    return Z, cnt, blocks, alive
+
+
+@jax.jit
+def bitmap_count_ref(U: jnp.ndarray, V: jnp.ndarray) -> jnp.ndarray:
+    """Plain AND + popcount support counting (no ES, no Z materialised)."""
+    return popcount32(U & V).reshape(U.shape[0], -1).sum(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def bitmap_intersect_full_ref(U: jnp.ndarray, V: jnp.ndarray,
+                              *, mode: str = "and",
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused full intersection: one AND/ANDNOT + popcount pass, no block
+    scan.  The fast production path when per-block work metrics are not
+    being collected (the screen still provides the ES savings)."""
+    Z = U & (V if mode == "and" else ~V)
+    cnt = popcount32(Z).reshape(U.shape[0], -1).sum(axis=-1)
+    return Z, cnt
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def screen_pairs_ref(first_u: jnp.ndarray, first_v: jnp.ndarray,
+                     suffix1_u: jnp.ndarray, suffix1_v: jnp.ndarray,
+                     rho_parent: jnp.ndarray, minsup: jnp.ndarray,
+                     *, mode: str = "and",
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inter-call screening: one-block refinement of the support bound.
+
+    ``first_*``  : uint32 (n_pairs, bw)  — block 0 of each operand
+    ``suffix1_*``: int32  (n_pairs,)     — popcount mass from block 1 on
+    ``rho_parent``: int32 (n_pairs,)     — parent support ("andnot" mode)
+
+    mode "and":    bound = |U0 & V0|  + min(sufU[1], sufV[1])
+    mode "andnot": bound = rho_parent - |U0 & ~V0|
+
+    Returns (bound, alive): pairs with ``bound < minsup`` are provably
+    infrequent and are never materialised for full intersection.  This is
+    the batched analogue of the paper's "detect infrequent candidates
+    early" applied *before* work is scheduled."""
+    if mode == "and":
+        c0 = popcount32(first_u & first_v).sum(axis=-1)
+        bound = c0 + jnp.minimum(suffix1_u, suffix1_v)
+    elif mode == "andnot":
+        c0 = popcount32(first_u & ~first_v).sum(axis=-1)
+        bound = rho_parent.astype(jnp.int32) - c0
+    else:
+        raise ValueError(f"bad mode {mode!r}")
+    return bound, bound >= jnp.asarray(minsup, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention + embedding bag oracles
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        softmax_scale=None) -> jnp.ndarray:
+    """Dense reference attention (fp32 softmax), GQA by kv-head repeat."""
+    B, Sq, H, D = q.shape
+    _, Skv, KH, Dv = v.shape
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskv->bqkgv", a, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("combiner",))
+def embedding_bag_ref(table, ids, mask, *, combiner: str = "mean"):
+    e = jnp.take(table, ids, axis=0)                 # (B, L, D)
+    m = mask.astype(jnp.float32)[..., None]
+    s = (e.astype(jnp.float32) * m).sum(axis=-2)
+    if combiner == "mean":
+        s = s / jnp.maximum(m.sum(axis=-2), 1.0)
+    return s.astype(table.dtype)
+
+
+# ---------------------------------------------------------------------------
+# N-list intersection (PrePost+) — device variant
+# ---------------------------------------------------------------------------
+#
+# Padded two-pointer merge per pair (vmap over pairs).  PP-codes are stored
+# as three parallel int32 arrays (pre, post, freq) padded with PRE=INT32_MAX
+# sentinels.  Early stopping uses the *corrected* criterion
+# z_mass + (rho_V - skip) < minsup (see core/oracle.py erratum note).
+
+NL_SENTINEL = _NL
+
+
+@functools.partial(jax.jit, static_argnames=("early_stop",))
+def nlist_intersect_ref(
+    u_pre: jnp.ndarray, u_post: jnp.ndarray, u_freq: jnp.ndarray,  # (P, Lu)
+    v_pre: jnp.ndarray, v_post: jnp.ndarray, v_freq: jnp.ndarray,  # (P, Lv)
+    u_len: jnp.ndarray, v_len: jnp.ndarray,                        # (P,)
+    rho_v: jnp.ndarray, minsup: jnp.ndarray,
+    *, early_stop: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (z_pre, z_post, z_freq_mass_per_slot, support, comparisons).
+
+    Output N-list slots follow U's ordering (slot i holds the ancestor code
+    matched by U[i], or sentinel).  Same-code merging is left to the host
+    (it only compacts storage; support is already exact here)."""
+    minsup = jnp.asarray(minsup, jnp.int32)
+    P, Lu = u_pre.shape
+    _, Lv = v_pre.shape
+
+    def one_pair(up, upost, uf, vp, vpost, vf, nu, nv, rv):
+        def cond(st):
+            i, j, _, _, _, alive, _ = st
+            return jnp.logical_and(jnp.logical_and(i < nu, j < nv), alive)
+
+        def body(st):
+            i, j, z_mass, skip, cmps, alive, out_pre = st
+            cmps = cmps + 1
+            xi_pre, xi_post, xi_f = up[i], upost[i], uf[i]
+            yj_pre, yj_post, yj_f = vp[j], vpost[j], vf[j]
+            is_desc = jnp.logical_and(xi_pre > yj_pre, xi_post < yj_post)
+            adv_i_nomatch = xi_pre <= yj_pre
+            # match: record ancestor code at slot i, advance i
+            out_pre = out_pre.at[i].set(
+                jnp.where(is_desc, j, out_pre[i]))
+            z_mass = z_mass + jnp.where(is_desc, xi_f, 0)
+            skip_inc = jnp.where(
+                jnp.logical_or(is_desc, adv_i_nomatch), 0, yj_f)
+            skip = skip + skip_inc
+            if early_stop:
+                alive = jnp.logical_and(
+                    alive, z_mass + (rv - skip) >= minsup)
+            i = i + jnp.where(jnp.logical_or(is_desc, adv_i_nomatch), 1, 0)
+            j = j + jnp.where(
+                jnp.logical_or(is_desc, adv_i_nomatch), 0, 1)
+            return i, j, z_mass, skip, cmps, alive, out_pre
+
+        init = (jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                jnp.int32(0), jnp.bool_(True),
+                jnp.full((Lu,), NL_SENTINEL, jnp.int32))
+        i, j, z_mass, skip, cmps, alive, out_pre = jax.lax.while_loop(
+            cond, body, init)
+        support = jnp.where(alive, z_mass, 0)  # aborted => certified < minsup
+        return out_pre, support, cmps, alive
+
+    out_pre, support, cmps, alive = jax.vmap(one_pair)(
+        u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+        u_len.astype(jnp.int32), v_len.astype(jnp.int32),
+        rho_v.astype(jnp.int32))
+    return out_pre, support, cmps, alive

@@ -1,0 +1,1 @@
+# Launch layer: production mesh, cell builders, dry-run, train/serve drivers.

@@ -1,0 +1,621 @@
+"""Cell builders: (arch x shape) -> a lowerable SPMD program.
+
+``build_cell(arch_id, shape_id, mesh)`` returns everything the dry-run /
+roofline harness needs:
+
+  * ``step_fn``       pure function over abstract args,
+  * ``abstract_args`` pytrees of ShapeDtypeStruct (weak-type-correct, no
+                      allocation),
+  * ``in_shardings``  NamedShardings resolved through the logical rules
+                      (arch overrides + shape overrides applied),
+  * bookkeeping for the roofline (model param counts, family, kind).
+
+Training cells lower the FULL train_step (fwd + bwd + optimizer update);
+decode cells lower serve_step; the FIM cells lower one distributed
+mining round (shard_map).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, get_shape, ArchSpec, ShapeDef
+from repro.distributed.sharding import (
+    use_rules, logical_spec, make_param_shardings, active_mesh)
+from repro.train.optimizer import (
+    OptConfig, opt_init, opt_state_logical)
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class BuiltCell:
+    arch_id: str
+    shape_id: str
+    kind: str
+    step_fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    rules: Dict[str, Any]
+    model_params: int = 0
+    active_params: int = 0
+    skip_reason: Optional[str] = None
+    notes: str = ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _shard_tree(mesh: Mesh, logical_tree):
+    return make_param_shardings(mesh, logical_tree)
+
+
+def _leaf_is_axes(x):
+    return isinstance(x, tuple) and all(
+        n is None or isinstance(n, str) for n in x)
+
+
+def _opt_cfg_for(arch_id: str) -> OptConfig:
+    # Adafactor for the >=100B models (moment memory), AdamW elsewhere.
+    if arch_id in ("command-r-plus-104b", "deepseek-v2-236b",
+                   "mixtral-8x22b"):
+        return OptConfig(kind="adafactor", lr=1e-4)
+    return OptConfig(kind="adamw", lr=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# family builders
+# ---------------------------------------------------------------------------
+
+def _build_lm(spec: ArchSpec, shape: ShapeDef, mesh: Mesh,
+              rules: Dict[str, Any]) -> BuiltCell:
+    from repro.models import transformer as T
+
+    cfg = spec.config_fn(shape.shape_id)
+    params_a, logical = _abstract_init(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = _shard_tree(mesh, logical)
+    n_params = _count(params_a)
+    n_active = _active_count(cfg, n_params)
+    dims = shape.dims
+
+    if shape.kind == "train":
+        opt_cfg = _opt_cfg_for(spec.arch_id)
+        opt_a, opt_logical = _abstract_opt(params_a, logical, opt_cfg)
+        o_sh = _shard_tree(mesh, opt_logical)
+        B, S = dims["global_batch"], dims["seq"]
+        batch_a = {"tokens": _sds((B, S), "int32"),
+                   "labels": _sds((B, S), "int32")}
+        b_sh = {"tokens": NamedSharding(mesh, logical_spec(("batch", None), mesh)),
+                "labels": NamedSharding(mesh, logical_spec(("batch", None), mesh))}
+
+        def loss_fn(p, b):
+            return T.loss_fn(p, cfg, b["tokens"], b["labels"])
+
+        step = make_train_step(loss_fn, opt_cfg,
+                               n_microbatches=dims["n_microbatches"])
+        return BuiltCell(spec.arch_id, shape.shape_id, shape.kind, step,
+                         (params_a, opt_a, batch_a), (p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1), rules=rules,
+                         model_params=n_params, active_params=n_active)
+
+    if shape.kind == "prefill":
+        B, S = dims["batch"], dims["seq"]
+        tokens_a = _sds((B, S), "int32")
+        t_sh = NamedSharding(mesh, logical_spec(("batch", None), mesh))
+
+        def step(p, tokens):
+            return T.prefill(p, cfg, tokens)
+
+        return BuiltCell(spec.arch_id, shape.shape_id, shape.kind, step,
+                         (params_a, tokens_a), (p_sh, t_sh),
+                         donate_argnums=(), rules=rules,
+                         model_params=n_params, active_params=n_active)
+
+    if shape.kind == "decode":
+        B, KV = dims["batch"], dims["kv_len"]
+        cache_a = jax.eval_shape(
+            functools.partial(T.init_cache, cfg, B, KV))
+        c_logical = T.cache_logical(cfg)
+        c_logical = {k: (c_logical[k] if k != "len" else ("batch",))
+                     for k in cache_a}
+        c_sh = jax.tree.map(
+            lambda names: NamedSharding(mesh, logical_spec(names, mesh)),
+            c_logical, is_leaf=_leaf_is_axes)
+        token_a = _sds((B,), "int32")
+        tok_sh = NamedSharding(mesh, logical_spec(("batch",), mesh))
+
+        def step(p, token, cache):
+            return T.decode_step(p, cfg, token, cache)
+
+        return BuiltCell(spec.arch_id, shape.shape_id, shape.kind, step,
+                         (params_a, token_a, cache_a),
+                         (p_sh, tok_sh, c_sh),
+                         donate_argnums=(2,), rules=rules,
+                         model_params=n_params, active_params=n_active)
+
+    raise ValueError(shape.kind)
+
+
+def _build_gnn(spec: ArchSpec, shape: ShapeDef, mesh: Mesh,
+               rules: Dict[str, Any]) -> BuiltCell:
+    from repro.models import gnn as G
+
+    cfg = spec.config_fn(shape.shape_id)
+    params_a, logical = _abstract_init(
+        lambda: G.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = _shard_tree(mesh, logical)
+    n_params = _count(params_a)
+    opt_cfg = _opt_cfg_for(spec.arch_id)
+    opt_a, opt_logical = _abstract_opt(params_a, logical, opt_cfg)
+    o_sh = _shard_tree(mesh, opt_logical)
+    d = shape.dims
+
+    if shape.kind == "train_full":
+        N, E, F = d["n_nodes"], d["n_edges"], d["d_feat"]
+        batch_a = {
+            "x": _sds((N, F), "float32"),
+            "edge_src": _sds((E,), "int32"),
+            "edge_dst": _sds((E,), "int32"),
+            "labels": _sds((N,), "int32"),
+            "mask": _sds((N,), "bool"),
+        }
+        b_log = {"x": ("nodes", "feat"), "edge_src": ("edges",),
+                 "edge_dst": ("edges",), "labels": ("nodes",),
+                 "mask": ("nodes",)}
+
+        def loss_fn(p, b):
+            return G.loss_full(p, cfg, b["x"], b["edge_src"],
+                               b["edge_dst"], b["labels"], b["mask"])
+
+    elif shape.kind == "train_sampled":
+        B, (f1, f2), F = d["batch_nodes"], d["fanouts"], d["d_feat"]
+        batch_a = {
+            "x_root": _sds((B, F), "float32"),
+            "x_h1": _sds((B, f1, F), "float32"),
+            "x_h2": _sds((B, f1, f2, F), "float32"),
+            "m1": _sds((B, f1), "bool"),
+            "m2": _sds((B, f1, f2), "bool"),
+            "labels": _sds((B,), "int32"),
+        }
+        b_log = {"x_root": ("nodes", "feat"),
+                 "x_h1": ("nodes", None, "feat"),
+                 "x_h2": ("nodes", None, None, "feat"),
+                 "m1": ("nodes", None), "m2": ("nodes", None, None),
+                 "labels": ("nodes",)}
+
+        def loss_fn(p, b):
+            return G.loss_sampled(p, cfg, (b["x_root"], b["x_h1"], b["x_h2"]),
+                                  (b["m1"], b["m2"]), b["labels"])
+
+    else:
+        raise ValueError(shape.kind)
+
+    b_sh = jax.tree.map(
+        lambda names: NamedSharding(mesh, logical_spec(names, mesh)),
+        b_log, is_leaf=_leaf_is_axes)
+    step = make_train_step(loss_fn, opt_cfg, n_microbatches=1)
+    return BuiltCell(spec.arch_id, shape.shape_id, shape.kind, step,
+                     (params_a, opt_a, batch_a), (p_sh, o_sh, b_sh),
+                     donate_argnums=(0, 1), rules=rules,
+                     model_params=n_params, active_params=n_params)
+
+
+def _build_recsys(spec: ArchSpec, shape: ShapeDef, mesh: Mesh,
+                  rules: Dict[str, Any]) -> BuiltCell:
+    from repro.models import recsys as R
+
+    cfg = spec.config_fn(shape.shape_id)
+    arch = spec.arch_id
+    d = shape.dims
+    init_map = {
+        "sasrec": R.sasrec_init, "din": R.din_init,
+        "xdeepfm": R.xdeepfm_init, "two-tower-retrieval": R.twotower_init,
+    }
+    params_a, logical = _abstract_init(
+        lambda: init_map[arch](jax.random.PRNGKey(0), cfg))
+    p_sh = _shard_tree(mesh, logical)
+    n_params = _count(params_a)
+
+    def named(names):
+        return NamedSharding(mesh, logical_spec(names, mesh))
+
+    if shape.kind == "train":
+        B = d["batch"]
+        opt_cfg = _opt_cfg_for(arch)
+        opt_a, opt_logical = _abstract_opt(params_a, logical, opt_cfg)
+        o_sh = _shard_tree(mesh, opt_logical)
+        if arch == "sasrec":
+            batch_a = {"seq_ids": _sds((B, cfg.seq_len), "int32"),
+                       "pos_ids": _sds((B, cfg.seq_len), "int32"),
+                       "neg_ids": _sds((B, cfg.seq_len, cfg.n_negatives),
+                                       "int32")}
+            b_log = {"seq_ids": ("batch", None), "pos_ids": ("batch", None),
+                     "neg_ids": ("batch", None, None)}
+            loss_fn = lambda p, b: R.sasrec_loss(  # noqa: E731
+                p, cfg, b["seq_ids"], b["pos_ids"], b["neg_ids"])
+        elif arch == "din":
+            batch_a = {"hist_ids": _sds((B, cfg.seq_len), "int32"),
+                       "target_id": _sds((B,), "int32"),
+                       "ctx_ids": _sds((B, cfg.n_context_fields), "int32"),
+                       "labels": _sds((B,), "float32")}
+            b_log = {"hist_ids": ("batch", None), "target_id": ("batch",),
+                     "ctx_ids": ("batch", None), "labels": ("batch",)}
+            loss_fn = lambda p, b: R.din_loss(  # noqa: E731
+                p, cfg, b["hist_ids"], b["target_id"], b["ctx_ids"],
+                b["labels"])
+        elif arch == "xdeepfm":
+            batch_a = {"field_ids": _sds((B, cfg.n_fields), "int32"),
+                       "labels": _sds((B,), "float32")}
+            b_log = {"field_ids": ("batch", None), "labels": ("batch",)}
+            loss_fn = lambda p, b: R.xdeepfm_loss(  # noqa: E731
+                p, cfg, b["field_ids"], b["labels"])
+        else:
+            batch_a = {"user_id": _sds((B,), "int32"),
+                       "hist_ids": _sds((B, cfg.n_user_hist), "int32"),
+                       "hist_mask": _sds((B, cfg.n_user_hist), "bool"),
+                       "pos_item": _sds((B,), "int32"),
+                       "item_logq": _sds((B,), "float32")}
+            b_log = {k: ("batch",) + (None,) * (len(v.shape) - 1)
+                     for k, v in batch_a.items()}
+            loss_fn = lambda p, b: R.twotower_loss(  # noqa: E731
+                p, cfg, b["user_id"], b["hist_ids"], b["hist_mask"],
+                b["pos_item"], b["item_logq"])
+        b_sh = jax.tree.map(named, b_log, is_leaf=_leaf_is_axes)
+        step = make_train_step(loss_fn, opt_cfg,
+                               n_microbatches=d.get("n_microbatches", 1))
+        return BuiltCell(arch, shape.shape_id, shape.kind, step,
+                         (params_a, opt_a, batch_a), (p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1), rules=rules,
+                         model_params=n_params, active_params=n_params)
+
+    if shape.kind == "serve":
+        B = d["batch"]
+        if arch == "sasrec":
+            batch_a = {"seq_ids": _sds((B, cfg.seq_len), "int32"),
+                       "cand": _sds((B, 200), "int32")}
+            b_log = {"seq_ids": ("batch", None), "cand": ("batch", None)}
+            step = lambda p, b: R.sasrec_score(  # noqa: E731
+                p, cfg, b["seq_ids"], b["cand"])
+        elif arch == "din":
+            batch_a = {"hist_ids": _sds((B, cfg.seq_len), "int32"),
+                       "target_id": _sds((B,), "int32"),
+                       "ctx_ids": _sds((B, cfg.n_context_fields), "int32")}
+            b_log = {"hist_ids": ("batch", None), "target_id": ("batch",),
+                     "ctx_ids": ("batch", None)}
+            step = lambda p, b: R.din_forward(  # noqa: E731
+                p, cfg, b["hist_ids"], b["target_id"], b["ctx_ids"])
+        elif arch == "xdeepfm":
+            batch_a = {"field_ids": _sds((B, cfg.n_fields), "int32")}
+            b_log = {"field_ids": ("batch", None)}
+            step = lambda p, b: R.xdeepfm_forward(  # noqa: E731
+                p, cfg, b["field_ids"])
+        else:
+            batch_a = {"user_id": _sds((B,), "int32"),
+                       "hist_ids": _sds((B, cfg.n_user_hist), "int32"),
+                       "hist_mask": _sds((B, cfg.n_user_hist), "bool"),
+                       "item_id": _sds((B,), "int32")}
+            b_log = {k: ("batch",) + (None,) * (len(v.shape) - 1)
+                     for k, v in batch_a.items()}
+
+            def step(p, b):
+                u = R.user_embed(p, cfg, b["user_id"], b["hist_ids"],
+                                 b["hist_mask"])
+                it = R.item_embed(p, cfg, b["item_id"])
+                return (u * it).sum(-1)
+        b_sh = jax.tree.map(named, b_log, is_leaf=_leaf_is_axes)
+        return BuiltCell(arch, shape.shape_id, shape.kind, step,
+                         (params_a, batch_a), (p_sh, b_sh),
+                         donate_argnums=(), rules=rules,
+                         model_params=n_params, active_params=n_params)
+
+    if shape.kind == "retrieval":
+        C = d["n_candidates"]
+        if arch == "sasrec":
+            batch_a = {"seq_ids": _sds((1, cfg.seq_len), "int32")}
+            b_log = {"seq_ids": (None, None)}
+            step = lambda p, b: jax.lax.top_k(  # noqa: E731
+                R.sasrec_score(p, cfg, b["seq_ids"]), 100)
+        elif arch == "din":
+            batch_a = {"hist_ids": _sds((1, cfg.seq_len), "int32"),
+                       "ctx_ids": _sds((1, cfg.n_context_fields), "int32"),
+                       "cand": _sds((C,), "int32")}
+            b_log = {"hist_ids": (None, None), "ctx_ids": (None, None),
+                     "cand": ("candidates",)}
+            step = lambda p, b: jax.lax.top_k(  # noqa: E731
+                R.din_score_candidates(p, cfg, b["hist_ids"], b["ctx_ids"],
+                                       b["cand"]), 100)
+        elif arch == "xdeepfm":
+            batch_a = {"field_ids": _sds((C, cfg.n_fields), "int32")}
+            b_log = {"field_ids": ("candidates", None)}
+            step = lambda p, b: jax.lax.top_k(  # noqa: E731
+                R.xdeepfm_forward(p, cfg, b["field_ids"]), 100)
+        else:
+            batch_a = {"user_id": _sds((1,), "int32"),
+                       "hist_ids": _sds((1, cfg.n_user_hist), "int32"),
+                       "hist_mask": _sds((1, cfg.n_user_hist), "bool"),
+                       "cand": _sds((C,), "int32")}
+            b_log = {"user_id": (None,), "hist_ids": (None, None),
+                     "hist_mask": (None, None), "cand": ("candidates",)}
+            step = lambda p, b: R.retrieval_scores(  # noqa: E731
+                p, cfg, b["user_id"], b["hist_ids"], b["hist_mask"],
+                b["cand"], topk=100)
+        b_sh = jax.tree.map(named, b_log, is_leaf=_leaf_is_axes)
+        return BuiltCell(arch, shape.shape_id, shape.kind, step,
+                         (params_a, batch_a), (p_sh, b_sh),
+                         donate_argnums=(), rules=rules,
+                         model_params=n_params, active_params=n_params)
+
+    raise ValueError(shape.kind)
+
+
+def _build_fim(spec: ArchSpec, shape: ShapeDef, mesh: Mesh,
+               rules: Dict[str, Any]) -> BuiltCell:
+    from repro.core.distributed import make_mining_round
+
+    d = shape.dims
+    round_fn = make_mining_round(mesh)
+    store_a = _sds((d["store_rows"], d["n_blocks"], d["block_words"]),
+                   "uint32")
+    pairs_a = _sds((d["pairs"], 2), "int32")
+    rho_a = _sds((d["pairs"],), "int32")
+    all_axes = tuple(mesh.axis_names)
+    tid_spec = all_axes if len(all_axes) > 1 else all_axes[0]
+    shardings = (NamedSharding(mesh, P(None, tid_spec, None)),
+                 NamedSharding(mesh, P(None, None)),
+                 NamedSharding(mesh, P(None)))
+    return BuiltCell(spec.arch_id, shape.shape_id, shape.kind, round_fn,
+                     (store_a, pairs_a, rho_a), shardings,
+                     donate_argnums=(), rules=rules,
+                     model_params=0, active_params=0,
+                     notes=f"{d['n_trans']:,} transactions")
+
+
+# ---------------------------------------------------------------------------
+# shared helpers + entry point
+# ---------------------------------------------------------------------------
+
+def _abstract_init(init_fn):
+    """eval_shape the params WITHOUT allocating; the logical-axes tree is
+    plain Python, so it is captured through a side channel while the init
+    function is being traced (strings are not valid traced outputs)."""
+    box = {}
+
+    def wrapper():
+        p, logical = init_fn()
+        box["logical"] = logical
+        return p
+
+    params_a = jax.eval_shape(wrapper)
+    return params_a, box["logical"]
+
+
+def _abstract_opt(params_a, logical, opt_cfg: OptConfig):
+    opt_a = jax.eval_shape(lambda: opt_init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_a),
+        opt_cfg))
+    return opt_a, opt_state_logical(logical, opt_cfg)
+
+
+def _count(tree) -> int:
+    return int(sum(_prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def _active_count(cfg, total: int) -> int:
+    if not getattr(cfg, "moe", False):
+        return total
+    f = cfg.moe_d_ff or cfg.d_ff
+    n_moe_layers = cfg.n_layers - cfg.first_k_dense
+    per_expert = 3 * cfg.d_model * f
+    return total - n_moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+
+
+_FAMILY_BUILDERS = {
+    "lm": _build_lm,
+    "gnn": _build_gnn,
+    "recsys": _build_recsys,
+    "fim": _build_fim,
+}
+
+
+# ---------------------------------------------------------------------------
+# LM costing variants (roofline exactness)
+# ---------------------------------------------------------------------------
+#
+# cost_analysis() counts a while-loop body exactly once, so the scanned
+# full-depth program under-reports FLOPs/bytes/collectives by the trip
+# counts.  Costs are therefore measured on small UNROLLED depths and
+# reconstructed exactly (layers are identical, so per-layer cost is
+# linear):
+#
+#   train:   total = opt_cost + n_mb * (base + b * L_full)
+#            where (base, b) come from grad-only compiles at the real
+#            microbatch size with L in {1, 2} (attention folded to one
+#            chunk so its inner scan is trip-count-1), and opt_cost from
+#            compiling the optimizer update alone;
+#   serve:   total = base + b * L_full  from step compiles at L in {1,2}.
+#
+# DeepSeek's single leading dense layer is pinned (absorbed into base);
+# only the MoE stack depth is extrapolated.
+
+def build_lm_costing(arch_id: str, shape_id: str, mesh: Mesh,
+                     n_layers: int,
+                     cfg_overrides: Optional[Dict[str, Any]] = None,
+                     dims_overrides: Optional[Dict[str, Any]] = None,
+                     ) -> BuiltCell:
+    """A grad-only (train) or step (serve) cell at reduced unrolled depth."""
+    spec = get_arch(arch_id)
+    shape = get_shape(spec, shape_id)
+    if dims_overrides:
+        shape = dataclasses.replace(
+            shape, dims={**shape.dims, **dims_overrides})
+    from repro.models import transformer as T
+
+    cfg0 = spec.config_fn(shape_id)
+    if cfg_overrides:
+        cfg0 = dataclasses.replace(cfg0, **cfg_overrides)
+    extra_dense = cfg0.first_k_dense if cfg0.moe else 0
+    # unroll_layers also unrolls the attention chunk walk, so attn_chunk
+    # is costed faithfully (a folded single chunk would hide carry traffic)
+    cfg = dataclasses.replace(
+        cfg0,
+        n_layers=n_layers + extra_dense,
+        first_k_dense=extra_dense,
+        unroll_layers=True,
+    )
+    rules: Dict[str, Any] = dict(spec.rules_override)
+    if shape.dims.get("batch") == 1:
+        rules["batch"] = None
+    if shape.kind == "decode":
+        model_sz = mesh.shape.get("model", 1)
+        if cfg0.mla or cfg0.n_kv_heads % model_sz != 0:
+            rules["kv_seq"] = "model"
+            rules["head_dim"] = "model"
+
+    with use_rules(rules), active_mesh(mesh):
+        params_a, logical = _abstract_init(
+            lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+        p_sh = _shard_tree(mesh, logical)
+        dims = shape.dims
+        if shape.kind == "train":
+            B = dims["global_batch"] // dims["n_microbatches"]
+            S = dims["seq"]
+            batch_a = {"tokens": _sds((B, S), "int32"),
+                       "labels": _sds((B, S), "int32")}
+            b_sh = jax.tree.map(
+                lambda _: NamedSharding(
+                    mesh, logical_spec(("batch", None), mesh)), batch_a)
+
+            def step(p, b):
+                def lf(p_):
+                    return T.loss_fn(p_, cfg, b["tokens"], b["labels"])[0]
+                return jax.grad(lf)(p)
+
+            args, shs = (params_a, batch_a), (p_sh, b_sh)
+        elif shape.kind == "prefill":
+            B, S = dims["batch"], dims["seq"]
+            tokens_a = _sds((B, S), "int32")
+            t_sh = NamedSharding(mesh, logical_spec(("batch", None), mesh))
+            step = lambda p, t: T.prefill(p, cfg, t)  # noqa: E731
+            args, shs = (params_a, tokens_a), (p_sh, t_sh)
+        else:  # decode
+            B, KV = dims["batch"], dims["kv_len"]
+            cache_a = jax.eval_shape(
+                functools.partial(T.init_cache, cfg, B, KV))
+            c_logical = T.cache_logical(cfg)
+            c_sh = jax.tree.map(
+                lambda names: NamedSharding(mesh, logical_spec(names, mesh)),
+                c_logical, is_leaf=_leaf_is_axes)
+            token_a = _sds((B,), "int32")
+            tok_sh = NamedSharding(mesh, logical_spec(("batch",), mesh))
+            step = lambda p, t, c: T.decode_step(p, cfg, t, c)  # noqa: E731
+            args, shs = (params_a, token_a, cache_a), (p_sh, tok_sh, c_sh)
+        return BuiltCell(arch_id, shape_id, f"costing-{shape.kind}", step,
+                         args, shs, donate_argnums=(), rules=rules)
+
+
+def build_opt_costing(arch_id: str, shape_id: str, mesh: Mesh) -> BuiltCell:
+    """The optimizer update alone, at full parameter shapes."""
+    spec = get_arch(arch_id)
+    from repro.models import transformer as T
+    from repro.train.optimizer import opt_update
+
+    cfg = spec.config_fn(shape_id)
+    rules = dict(spec.rules_override)
+    with use_rules(rules), active_mesh(mesh):
+        params_a, logical = _abstract_init(
+            lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+        p_sh = _shard_tree(mesh, logical)
+        opt_cfg = _opt_cfg_for(arch_id)
+        opt_a, opt_logical = _abstract_opt(params_a, logical, opt_cfg)
+        o_sh = _shard_tree(mesh, opt_logical)
+        grads_a = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_a)
+        g_sh = p_sh
+
+        def step(p, g, s):
+            return opt_update(p, g, s, opt_cfg)
+
+        return BuiltCell(arch_id, shape_id, "costing-opt", step,
+                         (params_a, grads_a, opt_a), (p_sh, g_sh, o_sh),
+                         donate_argnums=(), rules=rules)
+
+
+def build_fim_costing(arch_id: str, shape_id: str, mesh: Mesh,
+                      n_chunks: int, pair_chunk: int = 2048) -> BuiltCell:
+    """Reduced-pairs mining round for the cost fit (scan counted once)."""
+    spec = get_arch(arch_id)
+    shape = get_shape(spec, shape_id)
+    shape = dataclasses.replace(
+        shape, dims={**shape.dims, "pairs": n_chunks * pair_chunk})
+    cell = _build_fim(spec, shape, mesh, dict(spec.rules_override))
+    cell.kind = "costing-mine"
+    return cell
+
+
+def build_cell(arch_id: str, shape_id: str, mesh: Mesh,
+               extra_rules: Optional[Dict[str, Any]] = None,
+               cfg_overrides: Optional[Dict[str, Any]] = None,
+               dims_overrides: Optional[Dict[str, Any]] = None) -> BuiltCell:
+    """``cfg_overrides`` / ``dims_overrides`` / ``extra_rules`` are the
+    hillclimb knobs: dataclasses.replace fields on the arch config, shape
+    dim tweaks (e.g. n_microbatches), and sharding-rule swaps."""
+    spec = get_arch(arch_id)
+    shape = get_shape(spec, shape_id)
+    if cfg_overrides:
+        base_fn = spec.config_fn
+        spec = dataclasses.replace(
+            spec, config_fn=lambda s=None: dataclasses.replace(
+                base_fn(s), **cfg_overrides))
+    if dims_overrides:
+        shape = dataclasses.replace(
+            shape, dims={**shape.dims, **dims_overrides})
+
+    skip = spec.skip_reason(shape_id)
+    rules: Dict[str, Any] = dict(spec.rules_override)
+    # batch=1 cells cannot shard the batch axis
+    if shape.dims.get("batch") == 1 and shape.kind != "retrieval":
+        rules["batch"] = None
+    # Decode serving: when kv heads cannot cover the model axis (GQA kv=8
+    # vs model=16, or MLA's single latent), shard the KV cache's SEQUENCE
+    # axis over "model" instead — GSPMD then partitions the softmax like
+    # flash-decoding (partial max/sum + tiny all-reduces).  head_dim takes
+    # "model" for the kv projection weights so nothing big replicates.
+    if spec.family == "lm" and shape.kind == "decode":
+        cfg = spec.config_fn(shape_id)
+        model_sz = mesh.shape.get("model", 1)
+        if cfg.mla or cfg.n_kv_heads % model_sz != 0:
+            rules["kv_seq"] = "model"
+            rules["head_dim"] = "model"
+    if extra_rules:
+        rules.update(extra_rules)
+
+    if skip:
+        return BuiltCell(arch_id, shape_id, shape.kind, lambda: None,
+                         (), (), (), rules, skip_reason=skip)
+
+    with use_rules(rules), active_mesh(mesh):
+        return _FAMILY_BUILDERS[spec.family](spec, shape, mesh, rules)
+
+
+def lower_cell(cell: BuiltCell, mesh: Mesh):
+    """jit + lower the cell on its mesh (no compile)."""
+    with use_rules(cell.rules), active_mesh(mesh):
+        jitted = jax.jit(cell.step_fn,
+                         in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums)
+        return jitted.lower(*cell.abstract_args)

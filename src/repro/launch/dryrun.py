@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (including
+# repro.*) — jax locks the device count at first initialization.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell.
+
+For each cell on each production mesh (16x16 single-pod, 2x16x16
+multi-pod) this driver:
+
+  1. builds the cell (abstract inputs, shardings) — no allocation,
+  2. ``jax.jit(step).lower(...)`` then ``.compile()``,
+  3. records ``memory_analysis()`` (fits-on-chip proof),
+     ``cost_analysis()`` (FLOPs/bytes) and the parsed per-device
+     collective traffic into ``results/dryrun/<cell>.json``.
+
+Usage:
+  python -m repro.launch.dryrun                      # everything
+  python -m repro.launch.dryrun --mesh single        # one mesh
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  python -m repro.launch.dryrun --skip-existing      # resume a sweep
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY, all_cells, get_arch, get_shape
+from repro.launch.cells import (build_cell, build_fim_costing,
+                                build_lm_costing, build_opt_costing,
+                                lower_cell)
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo import (parse_collectives, COLLECTIVE_KINDS,
+                                estimate_bf16_shadow_bytes)
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def _metrics(compiled) -> dict:
+    """Flat metric dict: flops, bytes, per-kind collective link bytes."""
+    costs = compiled.cost_analysis()
+    cost = costs[0] if isinstance(costs, (list, tuple)) else costs
+    cost = dict(cost)
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0))}
+    coll = parse_collectives(compiled.as_text())
+    for kind in COLLECTIVE_KINDS:
+        v = coll.get(kind, {})
+        out[f"coll_{kind}_link_bytes"] = float(v.get("link_bytes", 0.0))
+        out[f"coll_{kind}_count"] = float(v.get("count", 0.0))
+    return out
+
+
+def _lin(a: dict, b: dict, ca: float, cb: float) -> dict:
+    """ca*a + cb*b elementwise (missing keys = 0), clamped at >= 0."""
+    keys = set(a) | set(b)
+    return {k: max(ca * a.get(k, 0.0) + cb * b.get(k, 0.0), 0.0)
+            for k in keys}
+
+
+def _lm_cost_fit(arch_id: str, shape_id: str, mesh, kind: str,
+                 cfg_overrides=None, dims_overrides=None) -> dict:
+    """Exact cost reconstruction for scanned LM programs (see cells.py)."""
+    spec = get_arch(arch_id)
+    cfg = spec.config_fn(shape_id)
+    if cfg_overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    n_full = (cfg.n_layers - cfg.first_k_dense) if cfg.moe else cfg.n_layers
+
+    m = {}
+    for n in (1, 2):
+        cc = build_lm_costing(arch_id, shape_id, mesh, n,
+                              cfg_overrides=cfg_overrides,
+                              dims_overrides=dims_overrides)
+        m[n] = _metrics(lower_cell(cc, mesh).compile())
+    per_layer = _lin(m[2], m[1], 1.0, -1.0)
+    base = _lin(m[1], per_layer, 1.0, -1.0)
+    step_cost = _lin(base, per_layer, 1.0, float(n_full))
+
+    detail = {"per_layer": per_layer, "base": base,
+              "n_layers_extrapolated": n_full}
+    if kind == "train":
+        dims = dict(get_shape(spec, shape_id).dims)
+        if dims_overrides:
+            dims.update(dims_overrides)
+        n_mb = dims["n_microbatches"]
+        oc = build_opt_costing(arch_id, shape_id, mesh)
+        opt_m = _metrics(lower_cell(oc, mesh).compile())
+        total = _lin(opt_m, step_cost, 1.0, float(n_mb))
+        detail["opt"] = opt_m
+        detail["n_microbatches"] = n_mb
+    else:
+        total = step_cost
+    detail["total"] = total
+    return detail
+
+
+def _fim_cost_fit(arch_id: str, shape_id: str, mesh) -> dict:
+    """Mining-round totals from reduced-pair-count compiles (scan body
+    counted once => measure 1-chunk and 2-chunk rounds, extrapolate)."""
+    m = {}
+    for n in (1, 2):
+        cc = build_fim_costing(arch_id, shape_id, mesh, n)
+        m[n] = _metrics(lower_cell(cc, mesh).compile())
+    per_chunk = _lin(m[2], m[1], 1.0, -1.0)
+    base = _lin(m[1], per_chunk, 1.0, -1.0)
+    pairs = get_shape(get_arch(arch_id), shape_id).dims["pairs"]
+    n_chunks = max(pairs // 2048, 1)
+    total = _lin(base, per_chunk, 1.0, float(n_chunks))
+    return {"per_chunk": per_chunk, "base": base,
+            "n_chunks": n_chunks, "total": total}
+
+
+def run_cell(arch_id: str, shape_id: str, mesh, mesh_name: str,
+             outdir: str, skip_existing: bool = False) -> dict:
+    name = f"{mesh_name}__{arch_id}__{shape_id}".replace("/", "_")
+    path = os.path.join(outdir, name + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    chips = 1
+    for s in mesh.shape.values():
+        chips *= s
+    rec = {"arch": arch_id, "shape": shape_id, "mesh": mesh_name,
+           "chips": chips, "ok": False}
+    t0 = time.time()
+    try:
+        cell = build_cell(arch_id, shape_id, mesh)
+        rec["model_params"] = cell.model_params
+        rec["active_params"] = cell.active_params
+        if cell.skip_reason:
+            rec["skip_reason"] = cell.skip_reason
+            rec["ok"] = True
+        else:
+            lowered = lower_cell(cell, mesh)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            rec["memory_analysis"] = _mem_dict(mem)
+            rec["peak_memory_per_chip"] = (
+                rec["memory_analysis"].get("temp_size_in_bytes", 0)
+                + rec["memory_analysis"].get("argument_size_in_bytes", 0))
+            hlo_text = compiled.as_text()
+            shadow = estimate_bf16_shadow_bytes(hlo_text)
+            rec["cpu_bf16_shadow_bytes"] = shadow
+            rec["peak_memory_tpu_estimate"] = max(
+                rec["peak_memory_per_chip"] - shadow, 0)
+            raw = _metrics(compiled)
+            rec["raw_scanned_cost"] = raw
+
+            family = REGISTRY[arch_id].family
+            if family == "lm":
+                # scanned while-bodies are counted once by cost_analysis:
+                # reconstruct exact totals from unrolled reduced depths
+                fit = _lm_cost_fit(arch_id, shape_id, mesh, cell.kind)
+                rec["cost_fit"] = fit
+                total = fit["total"]
+            elif family == "fim":
+                fit = _fim_cost_fit(arch_id, shape_id, mesh)
+                rec["cost_fit"] = fit
+                total = fit["total"]
+            else:
+                total = raw   # no scans in these programs: exact already
+            rec["cost_analysis"] = {"flops": total["flops"],
+                                    "bytes accessed": total["bytes"]}
+            rec["collectives"] = {"total": {
+                "link_bytes": sum(v for k, v in total.items()
+                                  if k.endswith("_link_bytes")),
+                "count": sum(v for k, v in total.items()
+                             if k.endswith("_count"))}}
+            for kind in COLLECTIVE_KINDS:
+                rec["collectives"][kind] = {
+                    "link_bytes": total.get(f"coll_{kind}_link_bytes", 0.0),
+                    "count": total.get(f"coll_{kind}_count", 0.0)}
+            # MODEL_FLOPS: 6*N(active)*D for train cells (D = tokens/step)
+            tokens = _tokens_per_step(arch_id, shape_id)
+            rec["tokens_per_step"] = tokens
+            if tokens and cell.active_params:
+                rec["model_flops"] = 6.0 * cell.active_params * tokens
+            rec["ok"] = True
+    except Exception as e:  # recorded, not fatal — a failed cell is a bug
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _tokens_per_step(arch_id: str, shape_id: str) -> int:
+    """Tokens processed per step (train/prefill) or per decode step."""
+    from repro.configs import get_arch, get_shape
+    spec = get_arch(arch_id)
+    if spec.family != "lm":
+        return 0
+    d = get_shape(spec, shape_id).dims
+    if "global_batch" in d:
+        return d["global_batch"] * d["seq"]
+    if shape_id.startswith("prefill"):
+        return d["batch"] * d["seq"]
+    return d.get("batch", 0)      # decode: one token per sequence
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-fim", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run needs 512 host devices; do not import jax before this "
+        f"module (got {len(jax.devices())})")
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("1pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    cells = all_cells(include_fim=not args.no_fim)
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+
+    n_fail = 0
+    for mesh_name, mesh in meshes:
+        for arch_id, shape_id in cells:
+            t0 = time.time()
+            rec = run_cell(arch_id, shape_id, mesh, mesh_name,
+                           args.outdir, args.skip_existing)
+            dt = time.time() - t0
+            if rec.get("skip_reason"):
+                status = f"SKIP ({rec['skip_reason'][:48]}…)"
+            elif rec.get("ok"):
+                mem = rec.get("peak_memory_per_chip", 0) / 2**30
+                fl = rec.get("cost_analysis", {}).get("flops", 0)
+                status = f"OK   mem/chip={mem:6.2f}GiB flops/chip={fl:.3e}"
+            else:
+                status = "FAIL " + rec.get("error", "?")[:80]
+                n_fail += 1
+            print(f"[{mesh_name}] {arch_id:24s} {shape_id:14s} "
+                  f"{dt:7.1f}s  {status}", flush=True)
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,414 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Targets (chosen per the brief from the 40-cell baseline table):
+  * deepseek-v2-236b x train_4k   — worst roofline fraction among trains
+  * graphsage-reddit x ogb_products — most collective-bound cell
+  * two-tower-retrieval x retrieval_cand — most representative of the
+    paper's technique (early-stopping screened top-k)
+plus the paper's own workload (fim-eclat x mine_1g) as the
+paper-faithful-vs-optimised pair.
+
+Each VARIANT is (hypothesis, knobs); the driver re-lowers, re-fits costs
+and records the three roofline terms before/after.
+
+    python -m repro.launch.hillclimb --target deepseek
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.cells import build_cell, lower_cell, BuiltCell
+from repro.launch import dryrun as DR
+from repro.roofline.analysis import RooflineTerms
+from repro.roofline.hlo import estimate_bf16_shadow_bytes
+
+
+def measure(arch, shape, mesh, mesh_name, *, cfg_overrides=None,
+            dims_overrides=None, extra_rules=None, step_builder=None,
+            family=None, tokens=0, n_active=0, train=False):
+    """Compile a (possibly overridden) cell and return roofline terms."""
+    t0 = time.time()
+    if step_builder is not None:
+        cell = step_builder(mesh)
+    else:
+        cell = build_cell(arch, shape, mesh, extra_rules=extra_rules,
+                          cfg_overrides=cfg_overrides,
+                          dims_overrides=dims_overrides)
+    compiled = lower_cell(cell, mesh).compile()
+    mem = compiled.memory_analysis()
+    peak = mem.temp_size_in_bytes + mem.argument_size_in_bytes
+    shadow = estimate_bf16_shadow_bytes(compiled.as_text())
+
+    fam = family or DR.REGISTRY[arch].family
+    if fam == "lm":
+        fit = DR._lm_cost_fit(arch, shape, mesh, cell.kind,
+                              cfg_overrides=cfg_overrides,
+                              dims_overrides=dims_overrides)
+        total = fit["total"]
+    else:
+        total = DR._metrics(compiled)
+    link = sum(v for k, v in total.items() if k.endswith("_link_bytes"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    terms = RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=total["flops"], bytes_per_chip=total["bytes"],
+        link_bytes_per_chip=link,
+        model_flops=(6.0 if train else 2.0) * n_active * tokens,
+        peak_memory_per_chip=peak)
+    d = terms.as_dict()
+    d["peak_memory_tpu_estimate"] = max(peak - shadow, 0)
+    d["compile_s"] = round(time.time() - t0, 1)
+    return d
+
+
+def log_variant(results, name, hypothesis, d, base=None):
+    entry = {"variant": name, "hypothesis": hypothesis, **d}
+    if base is not None:
+        for t in ("t_compute_s", "t_memory_s", "t_collective_s",
+                  "step_time_lb_s"):
+            if base[t] > 0:
+                entry[f"delta_{t}"] = round(d[t] / base[t] - 1, 4)
+    results.append(entry)
+    print(f"[{name}] comp={d['t_compute_s']*1e3:.1f}ms "
+          f"mem={d['t_memory_s']*1e3:.1f}ms "
+          f"coll={d['t_collective_s']*1e3:.1f}ms "
+          f"bound={d['bottleneck']} "
+          f"peak={d['peak_memory_per_chip']/2**30:.1f}GiB "
+          f"frac={d['roofline_fraction']:.4f}", flush=True)
+    return entry
+
+
+def climb_deepseek(mesh, mesh_name, results):
+    arch, shape = "deepseek-v2-236b", "train_4k"
+    tok = 256 * 4096
+    n_act = 28_000_000_000  # ~28B active (computed from config; see record)
+    from repro.configs import get_arch
+    from repro.models.transformer import LMConfig  # noqa: F401
+    cfg = get_arch(arch).config_fn(None)
+    from repro.launch.cells import _active_count, _abstract_init
+    from repro.models import transformer as T
+    pa, _ = _abstract_init(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    from repro.launch.cells import _count
+    n_act = _active_count(cfg, _count(pa))
+
+    base = measure(arch, shape, mesh, mesh_name, tokens=tok,
+                   n_active=n_act, train=True)
+    log_variant(results, "baseline(paper-faithful shardings)",
+                "remat=full, n_mb=8, attn_chunk=1024, FSDPxTP", base)
+
+    v = measure(arch, shape, mesh, mesh_name, tokens=tok, n_active=n_act,
+                train=True, cfg_overrides={"attn_chunk": 4096})
+    log_variant(results, "attn_chunk=4096",
+                "one online-softmax chunk: carry (m,l,acc) read/write x4 "
+                "fewer -> attention bytes down; predict ~5-10% t_mem",
+                v, base)
+
+    v2 = measure(arch, shape, mesh, mesh_name, tokens=tok, n_active=n_act,
+                 train=True, dims_overrides={"n_microbatches": 2})
+    log_variant(results, "n_microbatches=2",
+                "FSDP weight all-gathers + weight re-reads scale with "
+                "n_mb: 8->2 cuts collective ~4x; activation memory x4 "
+                "(watch peak)", v2, base)
+
+    v3 = measure(arch, shape, mesh, mesh_name, tokens=tok, n_active=n_act,
+                 train=True, cfg_overrides={"attn_chunk": 4096},
+                 dims_overrides={"n_microbatches": 2})
+    log_variant(results, "combined(chunk4096+mb2)",
+                "both wins are independent terms; expect ~product", v3,
+                base)
+
+    v4 = measure(arch, shape, mesh, mesh_name, tokens=tok, n_active=n_act,
+                 train=True, cfg_overrides={"attn_chunk": 4096,
+                                            "remat": "dots"},
+                 dims_overrides={"n_microbatches": 2})
+    log_variant(results, "plus remat=dots",
+                "recompute only non-dot ops: backward re-reads drop; "
+                "peak memory rises (saved dots) — accept if it fits",
+                v4, base)
+
+
+def climb_gnn(mesh, mesh_name, results):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_arch, get_shape
+    from repro.models import gnn as G
+    from repro.launch.cells import (_abstract_init, _shard_tree, _sds,
+                                    _opt_cfg_for, _abstract_opt)
+    from repro.train.train_step import make_train_step
+    from repro.distributed.sharding import use_rules, active_mesh
+
+    arch, shape = "graphsage-reddit", "ogb_products"
+    base = measure(arch, shape, mesh, mesh_name)
+    log_variant(results, "baseline(GSPMD segment_sum)",
+                "scatter-add over globally sharded edges all-reduces the "
+                "FULL (N, H) node array per layer", base)
+
+    v = measure(arch, shape, mesh, mesh_name,
+                cfg_overrides={"dtype": "bfloat16"})
+    log_variant(results, "bf16 features",
+                "halve every gather/all-reduce byte. NOTE: refutable on "
+                "this CPU-pipeline profile — XLA-CPU float-normalises "
+                "bf16 through f32 copies, so byte counts may not move "
+                "(the TPU pipeline keeps native bf16)", v, base)
+
+    def build_partitioned(mesh):
+        spec = get_arch(arch)
+        cfg = spec.config_fn(shape)
+        d = get_shape(spec, shape).dims
+        N, E = d["n_nodes"], d["n_edges"]
+        F_pad = 112   # d_feat 100 padded to /16 for feature sharding
+        loss_sharded = G.make_sharded_loss(mesh, cfg, N, F_pad,
+                                           node_axes=("data",),
+                                           feat_axis="model")
+        with use_rules({}), active_mesh(mesh):
+            import dataclasses as _dc
+            cfg_p = _dc.replace(cfg, d_feat=F_pad)
+            params_a, logical = _abstract_init(
+                lambda: G.init_params(jax.random.PRNGKey(0), cfg_p))
+            p_sh = jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), params_a)
+            opt_cfg = _opt_cfg_for(arch)
+            opt_a, _ = _abstract_opt(params_a, logical, opt_cfg)
+            o_sh = jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), opt_a)
+            batch_a = {
+                "x": _sds((N, F_pad), "float32"),
+                "edge_src": _sds((E,), "int32"),
+                "edge_dst_local": _sds((E,), "int32"),
+                "labels": _sds((N,), "int32"),
+                "mask": _sds((N,), "bool"),
+            }
+            b_sh = {
+                "x": NamedSharding(mesh, P("data", "model")),
+                "edge_src": NamedSharding(mesh, P("data")),
+                "edge_dst_local": NamedSharding(mesh, P("data")),
+                "labels": NamedSharding(mesh, P("data")),
+                "mask": NamedSharding(mesh, P("data")),
+            }
+
+            def loss_fn(p, b):
+                loss = loss_sharded(p, b["x"], b["edge_src"],
+                                    b["edge_dst_local"], b["labels"],
+                                    b["mask"])
+                return loss, {"ce": loss}
+
+            step = make_train_step(loss_fn, opt_cfg, 1)
+            return BuiltCell(arch, shape, "train_full_partitioned", step,
+                             (params_a, opt_a, batch_a),
+                             (p_sh, o_sh, b_sh), (0, 1), {})
+
+    v2 = measure(arch, shape, mesh, mesh_name,
+                 step_builder=build_partitioned, family="gnn")
+    log_variant(results, "dst-partitioned edges + feature sharding",
+                "edges pre-partitioned by destination shard => scatter is "
+                "shard-local (no (N,H) all-reduce); features sharded over "
+                "model => per-layer all-gather moves (N, F/16); predict "
+                "t_coll down ~10x", v2, base)
+    return results
+
+
+def climb_twotower(mesh, mesh_name, results):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_arch
+    from repro.models import recsys as R
+    from repro.launch.cells import (_abstract_init, _shard_tree, _sds,
+                                    _leaf_is_axes)
+    from repro.distributed.sharding import (use_rules, active_mesh,
+                                            logical_spec)
+
+    arch, shape = "two-tower-retrieval", "retrieval_cand"
+    base = measure(arch, shape, mesh, mesh_name)
+    log_variant(results, "baseline(fp32 full scan)",
+                "item tower fp32 over 1M candidates; memory-bound", base)
+
+    def build_screened(mesh):
+        spec = get_arch(arch)
+        cfg = spec.config_fn(None)
+        with use_rules({}), active_mesh(mesh):
+            params_a, logical = _abstract_init(
+                lambda: R.twotower_init(jax.random.PRNGKey(0), cfg))
+            p_sh = _shard_tree(mesh, logical)
+            batch_a = {"user_id": _sds((1,), "int32"),
+                       "hist_ids": _sds((1, cfg.n_user_hist), "int32"),
+                       "hist_mask": _sds((1, cfg.n_user_hist), "bool"),
+                       "cand": _sds((1_000_000,), "int32")}
+            b_log = {"user_id": (None,), "hist_ids": (None, None),
+                     "hist_mask": (None, None), "cand": ("candidates",)}
+            b_sh = jax.tree.map(
+                lambda names: NamedSharding(mesh,
+                                            logical_spec(names, mesh)),
+                b_log, is_leaf=_leaf_is_axes)
+
+            def step(p, b):
+                return R.retrieval_scores_screened(
+                    p, cfg, b["user_id"], b["hist_ids"], b["hist_mask"],
+                    b["cand"], topk=100, shortlist=4096)
+
+            return BuiltCell(arch, shape, "retrieval-screened", step,
+                             (params_a, batch_a), (p_sh, b_sh), (), {})
+
+    v = measure(arch, shape, mesh, mesh_name, step_builder=build_screened,
+                family="recsys")
+    log_variant(results, "ES-screened (bf16 screen + fp32 shortlist)",
+                "paper transfer: cheap certified screen over all 1M, "
+                "exact rescore on 4096 survivors; predict ~2x bytes down. "
+                "NOTE: bf16 wins are invisible on the CPU-pipeline "
+                "profile (f32 normalisation)", v, base)
+
+    # --- production restructure: precomputed item index -------------------
+    def build_offline_index(mesh, int8: bool):
+        spec = get_arch(arch)
+        cfg = spec.config_fn(None)
+        C = 1_000_000
+        with use_rules({}), active_mesh(mesh):
+            params_a, logical = _abstract_init(
+                lambda: R.twotower_init(jax.random.PRNGKey(0), cfg))
+            p_sh = _shard_tree(mesh, logical)
+            batch_a = {"user_id": _sds((1,), "int32"),
+                       "hist_ids": _sds((1, cfg.n_user_hist), "int32"),
+                       "hist_mask": _sds((1, cfg.n_user_hist), "bool")}
+            b_sh = jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), batch_a)
+            cand_spec = NamedSharding(
+                mesh, logical_spec(("candidates", None), mesh))
+            if int8:
+                index_a = (_sds((C, cfg.embed_dim), "int8"),
+                           _sds((C,), "float32"))
+                idx_sh = (cand_spec,
+                          NamedSharding(mesh,
+                                        logical_spec(("candidates",),
+                                                     mesh)))
+
+                def step(p, b, index):
+                    q8, scale = index
+                    u = R.user_embed(p, cfg, b["user_id"], b["hist_ids"],
+                                     b["hist_mask"])          # (1, D)
+                    # phase 1: int8 index scan (1/4 the bytes)
+                    approx = (q8.astype(jnp.float32) @ u[0]) * scale
+                    _, short = jax.lax.top_k(approx[None], 4096)
+                    # phase 2: exact fp32 tower on the shortlist
+                    ie = R.item_embed(p, cfg, short[0])
+                    exact = u @ ie.T
+                    vals, pos = jax.lax.top_k(exact, 100)
+                    return vals, jnp.take(short[0], pos[0])[None]
+
+                args = (params_a, batch_a, index_a)
+                shs = (p_sh, b_sh, idx_sh)
+            else:
+                index_a = _sds((C, cfg.embed_dim), "float32")
+                idx_sh = cand_spec
+
+                def step(p, b, index):
+                    u = R.user_embed(p, cfg, b["user_id"], b["hist_ids"],
+                                     b["hist_mask"])
+                    scores = u @ index.T
+                    return jax.lax.top_k(scores, 100)
+
+                args = (params_a, batch_a, index_a)
+                shs = (p_sh, b_sh, idx_sh)
+            return BuiltCell(arch, shape,
+                             "retrieval-index" + ("-int8" if int8 else ""),
+                             step, args, shs, (), {})
+
+    import jax.numpy as jnp  # noqa: F401 (used in closures)
+    v2 = measure(arch, shape, mesh, mesh_name,
+                 step_builder=lambda m: build_offline_index(m, False),
+                 family="recsys")
+    log_variant(results, "offline item index (fp32)",
+                "the item tower is query-independent: precompute it "
+                "offline (standard retrieval practice); per-query work = "
+                "one (1M x 256) dot; predict bytes ~8x down", v2, base)
+
+    v3 = measure(arch, shape, mesh, mesh_name,
+                 step_builder=lambda m: build_offline_index(m, True),
+                 family="recsys")
+    log_variant(results, "offline index + int8 ES screen",
+                "paper transfer on the index scan: int8 approx pass (1/4 "
+                "bytes) + exact fp32 tower on 4096 survivors; predict "
+                "another ~3x bytes down", v3, base)
+    return results
+
+
+def climb_fim(mesh, mesh_name, results):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.distributed import make_mining_round_v2
+    from repro.launch.cells import _sds
+    from repro.configs import get_arch, get_shape
+
+    arch, shape = "fim-eclat", "mine_1g"
+    base = measure(arch, shape, mesh, mesh_name)
+    log_variant(results, "baseline(paper-faithful round)",
+                "screen suffix recomputed per pair from full rows", base)
+
+    def build_v2(mesh):
+        d = get_shape(get_arch(arch), shape).dims
+        round_fn = make_mining_round_v2(mesh)
+        all_axes = tuple(mesh.axis_names)
+        tid_spec = all_axes if len(all_axes) > 1 else all_axes[0]
+        n_shards = int(np.prod(list(mesh.shape.values())))
+        args = (_sds((d["store_rows"], d["n_blocks"], d["block_words"]),
+                     "uint32"),
+                _sds((d["store_rows"], n_shards), "int32"),
+                _sds((d["pairs"], 2), "int32"),
+                _sds((d["pairs"],), "int32"))
+        shs = (NamedSharding(mesh, P(None, tid_spec, None)),
+               NamedSharding(mesh, P(None, tid_spec)),
+               NamedSharding(mesh, P(None, None)),
+               NamedSharding(mesh, P(None)))
+        return BuiltCell(arch, shape, "mine-v2", round_fn, args, shs,
+                         (), {})
+
+    v = measure(arch, shape, mesh, mesh_name, step_builder=build_v2,
+                family="fim")
+    log_variant(results, "v2: precomputed suffix + shared-a chunks",
+                "suffix tables are row invariants (stop recomputing); "
+                "u-row gathered once per chunk; predict ~2x bytes down",
+                v, base)
+    return results
+
+
+TARGETS = {
+    "deepseek": climb_deepseek,
+    "gnn": climb_gnn,
+    "twotower": climb_twotower,
+    "fim": climb_fim,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", choices=sorted(TARGETS) + ["all"],
+                    default="all")
+    ap.add_argument("--outdir", default="results/hillclimb")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512
+    mesh = make_production_mesh(multi_pod=False)
+    mesh_name = "1pod_16x16"
+
+    targets = sorted(TARGETS) if args.target == "all" else [args.target]
+    os.makedirs(args.outdir, exist_ok=True)
+    for t in targets:
+        print(f"=== hillclimb: {t} ===", flush=True)
+        results = []
+        try:
+            TARGETS[t](mesh, mesh_name, results)
+        except Exception as e:  # record partial progress
+            import traceback
+            results.append({"error": str(e),
+                            "traceback": traceback.format_exc()[-2000:]})
+            print("ERROR:", e)
+        with open(os.path.join(args.outdir, f"{t}.json"), "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

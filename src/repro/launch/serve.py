@@ -1,0 +1,66 @@
+"""Serving driver: batched prefill + decode with a KV cache.
+
+Scaled-down version of the production serving recipe: continuous batched
+greedy decoding over the synthetic prompt stream.  Demonstrates the
+prefill->decode cache handoff (incl. SWA ring caches and MLA latent
+caches) end-to-end on CPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+
+
+def serve_greedy(cfg: T.LMConfig, prompts: np.ndarray, max_new: int = 16,
+                 params=None, seed: int = 0, log_fn=print):
+    """prompts (B, S) int32 -> generated (B, max_new) int32."""
+    if params is None:
+        params, _ = T.init_params(jax.random.PRNGKey(seed), cfg)
+    B, S = prompts.shape
+    t0 = time.time()
+    logits, cache = jax.jit(
+        lambda p, t: T.prefill(p, cfg, t, max_len=S + max_new)
+    )(params, jnp.asarray(prompts))
+    step = jax.jit(lambda p, t, c: T.decode_step(p, cfg, t, c))
+    tok = logits.argmax(-1).astype(jnp.int32)
+    out: List[jnp.ndarray] = [tok]
+    for _ in range(max_new - 1):
+        logits, cache = step(params, tok, cache)
+        tok = logits.argmax(-1).astype(jnp.int32)
+        out.append(tok)
+    gen = jnp.stack(out, 1)
+    dt = time.time() - t0
+    log_fn(f"served {B} seqs x {max_new} new tokens in {dt:.2f}s "
+           f"({B * max_new / dt:.1f} tok/s incl. prefill of {S})")
+    return np.asarray(gen)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke_config_fn()
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    gen = serve_greedy(cfg, prompts, args.max_new)
+    print("generated ids:\n", gen)
+
+
+if __name__ == "__main__":
+    main()

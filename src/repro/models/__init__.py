@@ -1,0 +1,3 @@
+# Model definitions: transformer LMs, GraphSAGE, recsys rankers/retrievers.
+# Import submodules directly (repro.models.transformer etc.); this package
+# stays import-light so partial builds work.

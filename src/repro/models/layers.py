@@ -1,0 +1,657 @@
+"""Transformer building blocks in pure JAX (no flax).
+
+Every ``*_init`` returns ``(params, logical)`` — two pytrees with the same
+structure, the second holding logical-axis name tuples consumed by
+``repro.distributed.sharding.make_param_shardings``.  Apply functions are
+pure; dtype policy is explicit (params in ``param_dtype``, matmuls in
+``compute_dtype``, softmax/statistics in fp32).
+
+Attention is the chunked online-softmax formulation (lax.scan over KV
+chunks) so the quadratic score matrix never materialises — this is the
+XLA-everywhere implementation; the Pallas flash kernel in
+``repro.kernels.flash_attention`` is the TPU hot path and is validated
+against the same reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+Params = Dict[str, Any]
+Logical = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def _split(rng, n):
+    return jax.random.split(rng, n)
+
+
+def dense_init(rng, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.bfloat16, axes=("embed", "ff"),
+               ) -> Tuple[Params, Logical]:
+    scale = 1.0 / (d_in ** 0.5)
+    p = {"kernel": (jax.random.normal(rng, (d_in, d_out), jnp.float32)
+                    * scale).astype(dtype)}
+    l = {"kernel": axes}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+        l["bias"] = (axes[-1],)
+    return p, l
+
+
+def dense(p: Params, x: jnp.ndarray, compute_dtype=jnp.bfloat16):
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                   p["kernel"].astype(compute_dtype))
+    if "bias" in p:
+        y = y + p["bias"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> Tuple[Params, Logical]:
+    return ({"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)})
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_core(x, scale, eps):
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(ss[..., None] / x.shape[-1] + eps)
+    return x * inv.astype(x.dtype) * scale.astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(ss[..., None] / x.shape[-1] + eps)  # fp32 (...,1)
+    return x * inv.astype(x.dtype) * scale.astype(x.dtype), (x, scale, inv)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    # Hand-written VJP: all x-sized math stays in x's dtype; fp32 appears
+    # only in per-token scalars and dot ACCUMULATORS.  The autodiff VJP
+    # multiplies an fp32 cotangent into x, and XLA then hoists the
+    # convert over the scan-saved residual stack — an fp32 image of every
+    # layer input (24GiB/chip on command-r train).  This rule avoids any
+    # fp32 x-sized tensor entirely.
+    x, scale, inv = res
+    d = x.shape[-1]
+    inv_b = inv.astype(x.dtype)
+    gs = g * scale.astype(x.dtype)                       # (..., d)
+    dot = jnp.einsum("...d,...d->...", gs, x,
+                     preferred_element_type=jnp.float32)[..., None]
+    coeff = (inv * inv * inv * dot / d).astype(x.dtype)  # (..., 1)
+    d_x = gs * inv_b - x * coeff
+    xin = x * inv_b
+    reduce_axes = tuple(range(x.ndim - 1))
+    d_scale = jnp.einsum(
+        "...d,...d->d" if x.ndim > 1 else "d,d->d", g, xin,
+        preferred_element_type=jnp.float32).astype(scale.dtype)
+    del reduce_axes
+    return d_x, d_scale
+
+
+_rmsnorm_core.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5):
+    return _rmsnorm_core(x, p["scale"], eps)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Tuple[Params, Logical]:
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.bfloat16,
+               axes=("vocab", "embed")) -> Tuple[Params, Logical]:
+    p = {"table": (jax.random.normal(rng, (vocab, d), jnp.float32)
+                   * 0.02).astype(dtype)}
+    return p, {"table": axes}
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 1e4) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,d/2)
+    if x.ndim == angles.ndim + 1:                        # has heads dim
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (GQA-aware)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jnp.ndarray,       # (B, Sq, H, Dh)
+                      k: jnp.ndarray,       # (B, Sk, KH, Dh)
+                      v: jnp.ndarray,       # (B, Sk, KH, Dv)
+                      *,
+                      causal: bool,
+                      q_offset: jnp.ndarray | int = 0,
+                      window: int = 0,
+                      kv_valid_len: Optional[jnp.ndarray] = None,
+                      chunk: int = 1024,
+                      softmax_scale: Optional[float] = None,
+                      unroll: bool = False,
+                      ) -> jnp.ndarray:
+    """Memory-efficient attention: scan over KV chunks, fp32 statistics.
+
+    GQA is handled by folding query heads into (KH, G) groups so KV is
+    never repeated.  ``q_offset`` is the absolute position of q[:, 0]
+    (decode steps pass the cache length).  ``window`` > 0 adds a sliding
+    window mask (Mistral-style); ``kv_valid_len`` masks a partially filled
+    cache."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, KH, _ = k.shape
+    Dv = v.shape[-1]
+    assert H % KH == 0, (H, KH)
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else Dh ** -0.5
+    if Sk % chunk:
+        chunk = Sk  # fall back to a single chunk for odd cache sizes
+    n_chunks = Sk // chunk
+
+    qg = q.reshape(B, Sq, KH, G, Dh)
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)
+
+    kc = k.reshape(B, n_chunks, chunk, KH, Dh)
+    vc = v.reshape(B, n_chunks, chunk, KH, Dv)
+    kc = jnp.moveaxis(kc, 1, 0)   # (n, B, chunk, KH, Dh)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    neg = jnp.float32(-1e30)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, j = xs
+        kv_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg.astype(jnp.float32),
+                       k_j.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((Sq, chunk), jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+        if kv_valid_len is not None:
+            mask = mask[None] & (kv_pos[None, None, :]
+                                 < kv_valid_len[:, None, None])
+            s = jnp.where(mask[:, :, None, None, :], s, neg)
+        else:
+            s = jnp.where(mask[None, :, None, None, :], s, neg)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckv->bqkgv", p, v_j.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KH, G), neg, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KH, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KH, G, Dv), jnp.float32)
+    if unroll:
+        # Costing mode (launch/dryrun.py): cost_analysis counts a scan
+        # body once, so the chunk walk is unrolled to be costed exactly.
+        carry = (m0, l0, a0)
+        for j in range(n_chunks):
+            carry, _ = step(carry, (kc[j], vc[j], jnp.int32(j)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (covers MHA, GQA, QKV-bias, SWA)
+# ---------------------------------------------------------------------------
+
+def gqa_init(rng, d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
+             *, qkv_bias: bool = False, dtype=jnp.bfloat16,
+             ) -> Tuple[Params, Logical]:
+    r = _split(rng, 4)
+    s = 1.0 / (d_model ** 0.5)
+    p: Params = {
+        "wq": (jax.random.normal(r[0], (d_model, n_heads, d_head),
+                                 jnp.float32) * s).astype(dtype),
+        "wk": (jax.random.normal(r[1], (d_model, n_kv_heads, d_head),
+                                 jnp.float32) * s).astype(dtype),
+        "wv": (jax.random.normal(r[2], (d_model, n_kv_heads, d_head),
+                                 jnp.float32) * s).astype(dtype),
+        "wo": (jax.random.normal(r[3], (n_heads, d_head, d_model),
+                                 jnp.float32) * s).astype(dtype),
+    }
+    l: Logical = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, d_head), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads, d_head), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads, d_head), dtype)
+        l["bq"] = ("heads", "head_dim")
+        l["bk"] = ("kv_heads", "head_dim")
+        l["bv"] = ("kv_heads", "head_dim")
+    return p, l
+
+
+def gqa_apply(p: Params, x: jnp.ndarray, *, positions: jnp.ndarray,
+              rope_theta: float = 1e4, window: int = 0,
+              attn_chunk: int = 1024, compute_dtype=jnp.bfloat16,
+              return_kv: bool = False, attn_unroll: bool = False):
+    """Training/prefill forward: full-sequence causal attention.
+
+    ``return_kv=True`` additionally returns the (RoPE'd) K and raw V —
+    exactly what the decode cache stores (prefill path)."""
+    cd = compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    q = constrain(q, ("batch", None, "act_heads", None))
+    k = constrain(k, ("batch", None, "act_kv_heads", None))
+    o = chunked_attention(q, k, v, causal=True, window=window,
+                          chunk=attn_chunk, unroll=attn_unroll)
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(cd), p["wo"].astype(cd))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               *, rope_theta: float = 1e4, window: int = 0,
+               attn_chunk: int = 1024, compute_dtype=jnp.bfloat16,
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step.  cache = {k: (B, S, KH, Dh), v: ..., len: (B,)}.
+
+    With ``window`` > 0 the cache is a ring buffer of size ``window``.
+    Keys are stored post-RoPE at their absolute positions."""
+    cd = compute_dtype
+    B, one, _ = x.shape
+    assert one == 1
+    pos = cache["len"]                                    # (B,) int32
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    k_new = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wk"].astype(cd))
+    v_new = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k_new = k_new + p["bk"].astype(cd)
+        v_new = v_new + p["bv"].astype(cd)
+    q = apply_rope(q, pos[:, None], rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], rope_theta)
+
+    S = cache["k"].shape[1]
+    slot = (pos % S if window else jnp.minimum(pos, S - 1))  # (B,)
+    k_cache = _batched_set(cache["k"], k_new[:, 0], slot)
+    v_cache = _batched_set(cache["v"], v_new[:, 0], slot)
+    # Decode caches may shard their SEQ axis over "model" (GQA kv_heads <
+    # model size); the direct softmax below then partitions like
+    # flash-decoding: per-shard partial max/sum + tiny all-reduces.
+    k_cache = constrain(k_cache, ("batch", "kv_seq", "act_kv_heads", None))
+    v_cache = constrain(v_cache, ("batch", "kv_seq", "act_kv_heads", None))
+    valid = jnp.minimum(pos + 1, S)
+    # Ring buffers (window>0): every slot is valid once wrapped; RoPE'd
+    # keys carry absolute positions so slot order does not matter.
+    o = _direct_decode_attention(q, k_cache, v_cache, valid)
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(cd), p["wo"].astype(cd))
+    new_cache = {"k": k_cache, "v": v_cache, "len": pos + 1}
+    return y, new_cache
+
+
+def _direct_decode_attention(q: jnp.ndarray,      # (B, 1, H, Dh)
+                             k: jnp.ndarray,      # (B, S, KH, Dh)
+                             v: jnp.ndarray,      # (B, S, KH, Dv)
+                             valid: jnp.ndarray,  # (B,)
+                             ) -> jnp.ndarray:
+    """Single-token attention over the full cache (no chunk scan — the
+    scan would serialise what GSPMD can partition over a sharded S)."""
+    B, _, H, Dh = q.shape
+    _, S, KH, Dv = v.shape
+    G = H // KH
+    qg = q.reshape(B, 1, KH, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * (Dh ** -0.5)
+    mask = jnp.arange(S)[None, :] < valid[:, None]          # (B, S)
+    s = jnp.where(mask[:, None, None, None, :], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskv->bqkgv", a, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+def _batched_set(buf: jnp.ndarray, val: jnp.ndarray,
+                 idx: jnp.ndarray) -> jnp.ndarray:
+    """buf: (B, S, ...); val: (B, ...); idx: (B,) -> buf with per-batch set."""
+    return buf.at[jnp.arange(buf.shape[0]), idx].set(val.astype(buf.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    d_model: int
+    n_heads: int
+    q_lora: int          # 0 => no query compression
+    kv_lora: int
+    d_nope: int          # per-head non-rotary qk dim
+    d_rope: int          # per-head rotary qk dim (key side is shared)
+    d_v: int
+
+
+def mla_init(rng, dims: MLADims, dtype=jnp.bfloat16) -> Tuple[Params, Logical]:
+    r = _split(rng, 6)
+    d, H = dims.d_model, dims.n_heads
+    s = 1.0 / (d ** 0.5)
+
+    def w(rng_, shape):
+        return (jax.random.normal(rng_, shape, jnp.float32) * s).astype(dtype)
+
+    p: Params = {}
+    l: Logical = {}
+    if dims.q_lora:
+        p["wq_a"] = w(r[0], (d, dims.q_lora))
+        l["wq_a"] = ("embed", "lora")
+        p["q_norm"], ln = rmsnorm_init(dims.q_lora, dtype)
+        p["q_norm"] = p["q_norm"]["scale"]
+        l["q_norm"] = ("lora",)
+        p["wq_b"] = w(r[1], (dims.q_lora, H, dims.d_nope + dims.d_rope))
+        l["wq_b"] = ("lora", "heads", "head_dim")
+        del ln
+    else:
+        p["wq"] = w(r[1], (d, H, dims.d_nope + dims.d_rope))
+        l["wq"] = ("embed", "heads", "head_dim")
+    p["wkv_a"] = w(r[2], (d, dims.kv_lora + dims.d_rope))
+    l["wkv_a"] = ("embed", "lora")
+    p["kv_norm"] = rmsnorm_init(dims.kv_lora, dtype)[0]["scale"]
+    l["kv_norm"] = ("lora",)
+    p["wk_b"] = w(r[3], (dims.kv_lora, H, dims.d_nope))
+    l["wk_b"] = ("lora", "heads", "head_dim")
+    p["wv_b"] = w(r[4], (dims.kv_lora, H, dims.d_v))
+    l["wv_b"] = ("lora", "heads", "head_dim")
+    p["wo"] = w(r[5], (H, dims.d_v, d))
+    l["wo"] = ("heads", "head_dim", "embed")
+    return p, l
+
+
+def _mla_q(p, x, dims: MLADims, cd):
+    if dims.q_lora:
+        q_c = jnp.einsum("bsd,dr->bsr", x.astype(cd), p["wq_a"].astype(cd))
+        q_c = rmsnorm({"scale": p["q_norm"]}, q_c)
+        q = jnp.einsum("bsr,rhk->bshk", q_c.astype(cd), p["wq_b"].astype(cd))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    return q[..., :dims.d_nope], q[..., dims.d_nope:]
+
+
+def mla_apply(p: Params, x: jnp.ndarray, dims: MLADims, *,
+              positions: jnp.ndarray, rope_theta: float = 1e4,
+              attn_chunk: int = 1024, compute_dtype=jnp.bfloat16,
+              return_kv: bool = False, attn_unroll: bool = False):
+    """Training/prefill forward (expanded formulation).
+
+    ``return_kv=True`` additionally returns (c_kv, k_rope) — the latent
+    cache entries the absorbed decode path consumes."""
+    cd = compute_dtype
+    q_nope, q_rope = _mla_q(p, x, dims, cd)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x.astype(cd), p["wkv_a"].astype(cd))
+    c_kv, k_rope = kv[..., :dims.kv_lora], kv[..., dims.kv_lora:]
+    c_kv = rmsnorm({"scale": p["kv_norm"]}, c_kv)
+    k_rope = apply_rope(k_rope, positions, rope_theta)   # (B, S, d_rope)
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv.astype(cd),
+                        p["wk_b"].astype(cd))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv.astype(cd), p["wv_b"].astype(cd))
+    H = dims.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (H, dims.d_rope))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope_h], -1)
+    scale = (dims.d_nope + dims.d_rope) ** -0.5
+    o = chunked_attention(q, k, v, causal=True, chunk=attn_chunk,
+                          softmax_scale=scale, unroll=attn_unroll)
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(cd), p["wo"].astype(cd))
+    if return_kv:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               dims: MLADims, *, rope_theta: float = 1e4,
+               compute_dtype=jnp.bfloat16,
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed-matmul decode: the KV cache holds only the latent
+    ``c_kv (B, S, kv_lora)`` and shared ``k_rope (B, S, d_rope)``; w_uk is
+    absorbed into the query and w_uv into the output so per-step compute
+    scales with kv_lora, not n_heads * d_head * S (DeepSeek-V2 §2.1)."""
+    cd = compute_dtype
+    B = x.shape[0]
+    pos = cache["len"]
+    q_nope, q_rope = _mla_q(p, x, dims, cd)               # (B,1,H,*)
+    q_rope = apply_rope(q_rope, pos[:, None], rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x.astype(cd), p["wkv_a"].astype(cd))
+    c_new, kr_new = kv[..., :dims.kv_lora], kv[..., dims.kv_lora:]
+    c_new = rmsnorm({"scale": p["kv_norm"]}, c_new)
+    kr_new = apply_rope(kr_new, pos[:, None], rope_theta)
+
+    S = cache["c_kv"].shape[1]
+    slot = jnp.minimum(pos, S - 1)
+    c_kv = _batched_set(cache["c_kv"], c_new[:, 0], slot)
+    k_rope = _batched_set(cache["k_rope"], kr_new[:, 0], slot)
+    c_kv = constrain(c_kv, ("batch", "kv_seq", None))
+    k_rope = constrain(k_rope, ("batch", "kv_seq", None))
+    valid = jnp.minimum(pos + 1, S)
+
+    # absorb: q_lat[h] = q_nope[h] @ wk_b[:, h, :]^T  -> latent space
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(cd))
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                       c_kv.astype(jnp.float32))          # (B,H,1,S)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scale = (dims.d_nope + dims.d_rope) ** -0.5
+    s = (s_lat + s_rope) * scale
+    mask = jnp.arange(S)[None, None, None, :] < valid[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", a, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhk->bshk", o_lat.astype(cd), p["wv_b"].astype(cd))
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd))
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "len": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# MLPs: SwiGLU and sort-based top-k MoE
+# ---------------------------------------------------------------------------
+
+def swiglu_init(rng, d: int, f: int, dtype=jnp.bfloat16,
+                ff_axis: str = "ff") -> Tuple[Params, Logical]:
+    r = _split(rng, 3)
+    s_in, s_out = 1.0 / (d ** 0.5), 1.0 / (f ** 0.5)
+    p = {
+        "w_gate": (jax.random.normal(r[0], (d, f), jnp.float32)
+                   * s_in).astype(dtype),
+        "w_up": (jax.random.normal(r[1], (d, f), jnp.float32)
+                 * s_in).astype(dtype),
+        "w_down": (jax.random.normal(r[2], (f, d), jnp.float32)
+                   * s_out).astype(dtype),
+    }
+    l = {"w_gate": ("embed", ff_axis), "w_up": ("embed", ff_axis),
+         "w_down": (ff_axis, "embed")}
+    return p, l
+
+
+def swiglu(p: Params, x: jnp.ndarray, compute_dtype=jnp.bfloat16):
+    cd = compute_dtype
+    g = jnp.einsum("...d,df->...f", x.astype(cd), p["w_gate"].astype(cd))
+    u = jnp.einsum("...d,df->...f", x.astype(cd), p["w_up"].astype(cd))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+    h = constrain(h, ("batch",) + (None,) * (h.ndim - 2) + ("act_ff",))
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(cd))
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff: int            # per-expert hidden
+    n_shared: int = 0    # shared experts (DeepSeek)
+    capacity_factor: float = 1.25
+    # Dispatch groups: routing/sort/scatter run independently per token
+    # group whose leading axis is sharded like the batch — a GLOBAL sort
+    # would force replicated (T*k, D) intermediates under GSPMD (observed
+    # as a 125GiB/chip blow-up on deepseek-v2 train).
+    dispatch_groups: int = 32
+
+
+def moe_init(rng, dims: MoEDims, dtype=jnp.bfloat16) -> Tuple[Params, Logical]:
+    r = _split(rng, 5)
+    d, E, f = dims.d_model, dims.n_experts, dims.d_ff
+    s_in, s_out = 1.0 / (d ** 0.5), 1.0 / (f ** 0.5)
+
+    def w(rng_, shape, s):
+        return (jax.random.normal(rng_, shape, jnp.float32) * s).astype(dtype)
+
+    p: Params = {
+        "router": w(r[0], (d, E), s_in).astype(jnp.float32),
+        "w_gate": w(r[1], (E, d, f), s_in),
+        "w_up": w(r[2], (E, d, f), s_in),
+        "w_down": w(r[3], (E, f, d), s_out),
+    }
+    l: Logical = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "expert_ff"),
+        "w_up": ("experts", "embed", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "embed"),
+    }
+    if dims.n_shared:
+        sp, sl = swiglu_init(r[4], d, dims.n_shared * f, dtype, ff_axis="ff")
+        p["shared"] = sp
+        l["shared"] = sl
+    return p, l
+
+
+def _pick_groups(preferred: int, T: int) -> int:
+    g = min(preferred, T)
+    while T % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe_apply(p: Params, x: jnp.ndarray, dims: MoEDims, *,
+              compute_dtype=jnp.bfloat16,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based dropping MoE (MegaBlocks/MaxText style), group-local.
+
+    Tokens are split into ``dispatch_groups`` groups (leading axis sharded
+    like the batch).  Within each group, top_k copies are sorted by
+    destination expert and bucketed into per-expert capacity ``C`` slots;
+    expert compute is one ``(G, E, C, *)`` grouped GEMM with the expert
+    dim sharded over "model" (expert parallelism — the group<->expert
+    reshards become all-to-alls under SPMD).  Returns (y, aux_loss)."""
+    cd = compute_dtype
+    B, S, D = x.shape
+    E, K = dims.n_experts, dims.top_k
+    T = B * S
+    G = _pick_groups(dims.dispatch_groups, T)
+    Tg = T // G
+    xg = x.reshape(G, Tg, D)
+    xg = constrain(xg, ("batch", None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, K)                 # (G, Tg, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e (global)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(
+        jnp.ones((T * K,), jnp.float32)) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    C = int((Tg * K / E) * dims.capacity_factor) + 1
+    C = max(4, -(-C // 4) * 4)
+    n = Tg * K
+
+    def dispatch_one(x_t, ids_t, gates_t):
+        # x_t (Tg, D); ids/gates (Tg, K) — pure group-local dispatch.
+        expert_of = ids_t.reshape(n)
+        token_of = jnp.arange(n, dtype=jnp.int32) // K
+        gate_of = gates_t.reshape(n)
+        order = jnp.argsort(expert_of, stable=True)
+        se, st_, sg = expert_of[order], token_of[order], gate_of[order]
+        starts = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype),
+                                  side="left")
+        pos = jnp.arange(n, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+        keep = pos < C
+        slot = jnp.where(keep, se.astype(jnp.int32) * C + pos, E * C)
+        buf = jnp.zeros((E * C, D), cd).at[slot].set(
+            x_t[st_].astype(cd), mode="drop")
+        return buf.reshape(E, C, D), (st_, sg, keep, slot)
+
+    buf, (st_, sg, keep, slot) = jax.vmap(dispatch_one)(xg, ids, gates)
+    buf = constrain(buf, ("batch", "experts_act", None, None))
+
+    g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(cd))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(cd))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+    yb = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cd))
+    yb = constrain(yb, ("batch", "experts_act", None, None))
+
+    def combine_one(yb_g, st_g, sg_g, keep_g, slot_g):
+        y_cp = yb_g.reshape(E * C, D)[jnp.minimum(slot_g, E * C - 1)]
+        y_cp = (y_cp * (keep_g & (slot_g < E * C))[:, None]
+                * sg_g[:, None].astype(cd))
+        return jnp.zeros((Tg, D), cd).at[st_g].add(y_cp)
+
+    y = jax.vmap(combine_one)(yb, st_, sg, keep, slot)
+    y = constrain(y, ("batch", None, None))
+
+    if "shared" in p:
+        y = y + swiglu(p["shared"], xg, cd)
+    return y.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,501 @@
+"""Decoder-only LM covering all five assigned architectures.
+
+One config dataclass spans dense GQA (command-r-plus, granite), QKV-bias
+(qwen1.5), MLA + fine-grained MoE with shared experts (deepseek-v2), and
+SWA + MoE (mixtral).  Layers are stacked (leading ``L`` axis) and executed
+with ``lax.scan`` so HLO size is independent of depth — that is what keeps
+the 64-layer 104B dry-run compile tractable.  Heterogeneous stacks
+(DeepSeek's leading dense layers) are two scans.
+
+Params/logical trees follow repro.models.layers conventions; sharding is
+applied by the caller via repro.distributed.sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                  # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    first_k_dense: int = 0
+    capacity_factor: float = 1.25
+    moe_aux_weight: float = 0.01
+    # MLA
+    mla: bool = False
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # attention flavour
+    sliding_window: int = 0          # 0 => full causal
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    # execution
+    attn_chunk: int = 1024
+    vocab_pad_multiple: int = 128
+    dtype: str = "bfloat16"
+    remat: str = "dots"              # none | dots | full
+    # unroll the layer stacks instead of lax.scan — used by the roofline
+    # costing compiles (cost_analysis counts a while body exactly once,
+    # so costs are measured on small UNROLLED depths and extrapolated;
+    # see launch/dryrun.py).
+    unroll_layers: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def mla_dims(self) -> L.MLADims:
+        return L.MLADims(self.d_model, self.n_heads, self.q_lora,
+                         self.kv_lora, self.qk_nope_dim, self.qk_rope_dim,
+                         self.v_head_dim)
+
+    @property
+    def moe_dims(self) -> L.MoEDims:
+        return L.MoEDims(self.d_model, self.n_experts, self.top_k,
+                         self.moe_d_ff or self.d_ff, self.n_shared_experts,
+                         self.capacity_factor)
+
+    def param_count(self) -> int:
+        """Total parameters (for MODEL_FLOPS = 6*N*D roofline terms)."""
+        shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0),
+                                                    self)[0])
+        return sum(int(jnp.prod(jnp.array(x.shape)))
+                   for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.param_count()
+        total = self.param_count()
+        f = self.moe_d_ff or self.d_ff
+        n_moe_layers = self.n_layers - self.first_k_dense
+        per_expert = 3 * self.d_model * f
+        inactive = n_moe_layers * (self.n_experts - self.top_k) * per_expert
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(rng, cfg: LMConfig, use_moe: bool):
+    r = jax.random.split(rng, 4)
+    dt = cfg.param_dtype
+    p: Dict[str, Any] = {}
+    l: Dict[str, Any] = {}
+    p["attn_norm"], l["attn_norm"] = L.rmsnorm_init(cfg.d_model, dt)
+    if cfg.mla:
+        p["attn"], l["attn"] = L.mla_init(r[0], cfg.mla_dims, dt)
+    else:
+        p["attn"], l["attn"] = L.gqa_init(
+            r[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, dtype=dt)
+    p["mlp_norm"], l["mlp_norm"] = L.rmsnorm_init(cfg.d_model, dt)
+    if use_moe:
+        p["mlp"], l["mlp"] = L.moe_init(r[1], cfg.moe_dims, dt)
+    else:
+        p["mlp"], l["mlp"] = L.swiglu_init(r[1], cfg.d_model, cfg.d_ff, dt)
+    return p, l
+
+
+def _stack_init(rng, cfg: LMConfig, n: int, use_moe: bool):
+    """Init n layers with stacked (leading-L) leaves via vmap."""
+    if n == 0:
+        return None, None
+    rngs = jax.random.split(rng, n)
+    p0, l0 = _layer_init(rngs[0], cfg, use_moe)  # structure template
+    stacked = jax.vmap(lambda r: _layer_init(r, cfg, use_moe)[0])(rngs)
+    logical = jax.tree.map(
+        lambda names: (None,) + tuple(names), l0,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            n_ is None or isinstance(n_, str) for n_ in x))
+    del p0
+    return stacked, logical
+
+
+def init_params(rng, cfg: LMConfig):
+    r = jax.random.split(rng, 4)
+    dt = cfg.param_dtype
+    params: Dict[str, Any] = {}
+    logical: Dict[str, Any] = {}
+    params["embed"], logical["embed"] = L.embed_init(
+        r[0], cfg.padded_vocab, cfg.d_model, dt)
+    n_dense = cfg.first_k_dense if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+    if n_dense:
+        params["dense_layers"], logical["dense_layers"] = _stack_init(
+            r[1], cfg, n_dense, use_moe=False)
+    if n_moe:
+        params["moe_layers"], logical["moe_layers"] = _stack_init(
+            r[2], cfg, n_moe, use_moe=True)
+    params["final_norm"], logical["final_norm"] = L.rmsnorm_init(
+        cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"], logical["lm_head"] = L.embed_init(
+            r[3], cfg.padded_vocab, cfg.d_model, dt)
+    return params, logical
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+def _stack_len(stack) -> int:
+    return jax.tree.leaves(stack)[0].shape[0]
+
+
+def _stack_at(stack, i: int):
+    return jax.tree.map(lambda x: x[i], stack)
+
+
+def _scan_or_unroll(step, carry, stack, unroll: bool):
+    """lax.scan over stacked layer params, or a python loop (costing)."""
+    if not unroll:
+        return jax.lax.scan(step, carry, stack)
+    ys = []
+    for i in range(_stack_len(stack)):
+        carry, y = step(carry, _stack_at(stack, i))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _layer_fwd(cfg: LMConfig, use_moe: bool, x, lp, positions):
+    # NOTE: when this runs under jax.checkpoint, ``positions`` MUST be an
+    # explicit argument — a closed-over tracer disables rematerialisation
+    # of everything that depends on it (the RoPE'd q/k and their fp32
+    # score operands were silently saved per layer: +24GiB/chip).
+    h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+    if cfg.mla:
+        a = L.mla_apply(lp["attn"], h, cfg.mla_dims, positions=positions,
+                        rope_theta=cfg.rope_theta, attn_chunk=cfg.attn_chunk,
+                        compute_dtype=cfg.param_dtype,
+                        attn_unroll=cfg.unroll_layers)
+    else:
+        a = L.gqa_apply(lp["attn"], h, positions=positions,
+                        rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+                        attn_chunk=cfg.attn_chunk,
+                        compute_dtype=cfg.param_dtype,
+                        attn_unroll=cfg.unroll_layers)
+    x = x + a
+    h = L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+    if use_moe:
+        m, aux = L.moe_apply(lp["mlp"], h, cfg.moe_dims,
+                             compute_dtype=cfg.param_dtype)
+    else:
+        m, aux = L.swiglu(lp["mlp"], h, cfg.param_dtype), jnp.float32(0)
+    x = x + m
+    x = constrain(x, ("batch", None, "act_embed"))
+    return x, aux
+
+
+def forward(params, cfg: LMConfig, tokens: jnp.ndarray,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> (logits (B, S, Vpad) fp32, moe aux loss)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = params["embed"]["table"][tokens]
+    x = constrain(x, ("batch", None, "act_embed"))
+
+    aux_total = jnp.float32(0)
+
+    def scan_stack(x, stack, use_moe, aux_total):
+        body = _remat(functools.partial(_layer_fwd, cfg, use_moe), cfg)
+
+        def step(carry, lp):
+            x, aux = carry
+            x, a = body(x, lp, positions)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = _scan_or_unroll(step, (x, aux_total), stack,
+                                            cfg.unroll_layers)
+        return x, aux_total
+
+    if "dense_layers" in params:
+        x, aux_total = scan_stack(x, params["dense_layers"], False, aux_total)
+    if "moe_layers" in params:
+        x, aux_total = scan_stack(x, params["moe_layers"], True, aux_total)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"]["table"] if cfg.tie_embeddings
+            else params["lm_head"]["table"])
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(cfg.param_dtype),
+                        head.astype(cfg.param_dtype))
+    logits = constrain(logits, ("batch", None, "vocab_act"))
+    # Returned in param dtype: the fp32 (B, S, V) tensor must NEVER be
+    # materialised (it is 4x the largest activation in the model); the
+    # loss below keeps all fp32 math inside fused reductions.
+    return logits, aux_total
+
+
+def loss_fn(params, cfg: LMConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Causal LM loss; labels are next-token ids, -1 = masked.
+
+    Memory note: CE is computed as logsumexp(logits) - logits[label] so
+    no (B, S, V) buffer beyond the bf16 logits exists — the fp32
+    exp/convert fuse into the reduction (this was an 80GiB/chip swing on
+    the qwen train cell before the rewrite)."""
+    logits, aux = forward(params, cfg, tokens)
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min / 2, logits.dtype)
+    pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+    logits = jnp.where(pad[None, None, :], neg, logits)
+
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    # fp32 exp + sum fused into the reduce; no fp32 (B,S,V) buffer
+    s = jnp.sum(jnp.exp((logits - m).astype(jnp.float32)), axis=-1)
+    lse = jnp.log(s) + m[..., 0].astype(jnp.float32)
+
+    valid = labels >= 0
+    safe_labels = jnp.maximum(labels, 0)
+    label_logit = jnp.take_along_axis(
+        logits, safe_labels[..., None], axis=-1)[..., 0].astype(jnp.float32)
+    n_valid = jnp.maximum(valid.sum(), 1)
+    ce = ((lse - label_logit) * valid).sum() / n_valid
+    total = ce + cfg.moe_aux_weight * aux
+    return total, {"ce": ce, "aux": aux,
+                   "ppl": jnp.exp(jnp.minimum(ce, 20.0))}
+
+
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray,
+            max_len: Optional[int] = None,
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Serve-side prefill: run the full prompt, return last-token logits
+    and the populated KV cache (ready for decode_step).
+
+    ``max_len`` sets the cache capacity (>= prompt length; defaults to the
+    prompt length).  For SWA models only the trailing ``window`` positions
+    are kept, rolled so ring-buffer slots line up with ``pos % window``."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = params["embed"]["table"][tokens]
+    x = constrain(x, ("batch", None, "act_embed"))
+
+    def layer_fwd_kv(x, lp, use_moe):
+        h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+        if cfg.mla:
+            a, kv = L.mla_apply(lp["attn"], h, cfg.mla_dims,
+                                positions=positions,
+                                rope_theta=cfg.rope_theta,
+                                attn_chunk=cfg.attn_chunk, return_kv=True,
+                                compute_dtype=cfg.param_dtype,
+                                attn_unroll=cfg.unroll_layers)
+        else:
+            a, kv = L.gqa_apply(lp["attn"], h, positions=positions,
+                                rope_theta=cfg.rope_theta,
+                                window=cfg.sliding_window,
+                                attn_chunk=cfg.attn_chunk, return_kv=True,
+                                compute_dtype=cfg.param_dtype,
+                                attn_unroll=cfg.unroll_layers)
+        x = x + a
+        h = L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+        if use_moe:
+            m, _ = L.moe_apply(lp["mlp"], h, cfg.moe_dims,
+                               compute_dtype=cfg.param_dtype)
+        else:
+            m = L.swiglu(lp["mlp"], h, cfg.param_dtype)
+        x = x + m
+        x = constrain(x, ("batch", None, "act_embed"))
+        if cfg.sliding_window and S > cfg.sliding_window:
+            # Keep the trailing window, rolled so index == pos % window
+            # (ring-buffer alignment for any prompt length).
+            w = cfg.sliding_window
+            kv = tuple(jnp.roll(
+                jax.lax.dynamic_slice_in_dim(t, S - w, w, axis=1),
+                (S - w) % w, axis=1) for t in kv)
+        return x, kv
+
+    kv_stacks = []
+    for key, use_moe in (("dense_layers", False), ("moe_layers", True)):
+        if key not in params:
+            continue
+
+        def step(x, lp, _use_moe=use_moe):
+            x, kv = layer_fwd_kv(x, lp, _use_moe)
+            return x, kv
+
+        x, kvs = _scan_or_unroll(step, x, params[key], cfg.unroll_layers)
+        kv_stacks.append(kvs)
+
+    kv0 = tuple(jnp.concatenate([ks[i] for ks in kv_stacks], axis=0)
+                for i in range(2))
+    # Pad the seq axis to the cache capacity: the ring window for SWA,
+    # otherwise max_len (room for the decode phase).
+    if cfg.sliding_window:
+        cap = cfg.sliding_window
+    else:
+        cap = max(max_len or S, S)
+    cur = kv0[0].shape[2]
+    if cur < cap:
+        kv0 = tuple(jnp.pad(t, ((0, 0), (0, 0), (0, cap - cur))
+                    + ((0, 0),) * (t.ndim - 3)) for t in kv0)
+    if cfg.mla:
+        cache = {"c_kv": kv0[0], "k_rope": kv0[1]}
+    else:
+        cache = {"k": kv0[0], "v": kv0[1]}
+    cache["len"] = jnp.full((B,), S, jnp.int32)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"]["table"] if cfg.tie_embeddings
+            else params["lm_head"]["table"])
+    last = x[:, -1]
+    logits = jnp.einsum("bd,vd->bv", last.astype(cfg.param_dtype),
+                        head.astype(cfg.param_dtype))
+    return logits.astype(jnp.float32), cache
+
+
+# ---------------------------------------------------------------------------
+# decode (serve) path
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype=None) -> Dict[str, jnp.ndarray]:
+    """KV cache pytree.  SWA models get a ring buffer of window size;
+    MLA models cache the latent + shared rope key only."""
+    dt = dtype or cfg.param_dtype
+    S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    nl = cfg.n_layers
+    if cfg.mla:
+        return {
+            "c_kv": jnp.zeros((nl, batch, S, cfg.kv_lora), dt),
+            "k_rope": jnp.zeros((nl, batch, S, cfg.qk_rope_dim), dt),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((nl, batch, S, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((nl, batch, S, cfg.n_kv_heads, cfg.head_dim), dt),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_logical(cfg: LMConfig) -> Dict[str, Tuple]:
+    """Logical axes for the cache (sharded like activations)."""
+    if cfg.mla:
+        return {"c_kv": (None, "batch", "kv_seq", None),
+                "k_rope": (None, "batch", "kv_seq", None),
+                "len": ("batch",)}
+    return {"k": (None, "batch", "kv_seq", "kv_heads", None),
+            "v": (None, "batch", "kv_seq", "kv_heads", None),
+            "len": ("batch",)}
+
+
+def decode_step(params, cfg: LMConfig, token: jnp.ndarray,
+                cache: Dict[str, jnp.ndarray],
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One token for every sequence.  token (B,) int32 -> logits (B, Vpad)."""
+    B = token.shape[0]
+    x = params["embed"]["table"][token][:, None, :]     # (B, 1, D)
+    x = constrain(x, ("batch", None, "act_embed"))
+    pos = cache["len"]
+
+    def layer_step(x, xs):
+        if cfg.mla:
+            lp, c_kv_l, k_rope_l = xs
+            lcache = {"c_kv": c_kv_l, "k_rope": k_rope_l, "len": pos}
+            h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+            a, nc = L.mla_decode(lp["attn"], h, lcache, cfg.mla_dims,
+                                 rope_theta=cfg.rope_theta,
+                                 compute_dtype=cfg.param_dtype)
+            new_slices = (nc["c_kv"], nc["k_rope"])
+        else:
+            lp, k_l, v_l = xs
+            lcache = {"k": k_l, "v": v_l, "len": pos}
+            h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+            a, nc = L.gqa_decode(lp["attn"], h, lcache,
+                                 rope_theta=cfg.rope_theta,
+                                 window=cfg.sliding_window,
+                                 attn_chunk=cfg.attn_chunk,
+                                 compute_dtype=cfg.param_dtype)
+            new_slices = (nc["k"], nc["v"])
+        x = x + a
+        h = L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+        if "router" in lp["mlp"]:
+            m, _ = L.moe_apply(lp["mlp"], h, cfg.moe_dims,
+                               compute_dtype=cfg.param_dtype)
+        else:
+            m = L.swiglu(lp["mlp"], h, cfg.param_dtype)
+        return x + m, new_slices
+
+    # Assemble the per-layer scan inputs in stack order (dense then moe).
+    stacks = []
+    if "dense_layers" in params:
+        stacks.append(params["dense_layers"])
+    if "moe_layers" in params:
+        stacks.append(params["moe_layers"])
+
+    offset = 0
+    new_cache = dict(cache)
+    for stack in stacks:
+        n = jax.tree.leaves(stack)[0].shape[0]
+        sl = slice(offset, offset + n)
+        if cfg.mla:
+            xs = (stack, cache["c_kv"][sl], cache["k_rope"][sl])
+        else:
+            xs = (stack, cache["k"][sl], cache["v"][sl])
+        x, new_slices = _scan_or_unroll(layer_step, x, xs,
+                                        cfg.unroll_layers)
+        if cfg.mla:
+            new_cache["c_kv"] = new_cache["c_kv"].at[sl].set(new_slices[0])
+            new_cache["k_rope"] = new_cache["k_rope"].at[sl].set(
+                new_slices[1])
+        else:
+            new_cache["k"] = new_cache["k"].at[sl].set(new_slices[0])
+            new_cache["v"] = new_cache["v"].at[sl].set(new_slices[1])
+        offset += n
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"]["table"] if cfg.tie_embeddings
+            else params["lm_head"]["table"])
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(cfg.param_dtype),
+                        head.astype(cfg.param_dtype))[:, 0]
+    new_cache["len"] = cache["len"] + 1
+    return logits.astype(jnp.float32), new_cache

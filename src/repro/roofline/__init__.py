@@ -1,0 +1,1 @@
+# Roofline: cost_analysis + HLO collective parsing -> 3-term model.

@@ -1,0 +1,123 @@
+"""HLO text parsing: per-device collective traffic from a compiled module.
+
+``cost_analysis()`` does not report collective bytes, so we parse the
+post-SPMD (per-device) HLO: build a symbol table of op result sizes, then
+for every ``all-reduce`` / ``all-gather`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` sum the byte sizes of its
+*operands* (per the brief).  Shapes in the partitioned module are
+per-device shapes, so the sums are per-chip traffic; the roofline model
+applies a ring-algorithm factor per collective kind.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# ring-algorithm per-link byte multiplier (relative to operand bytes)
+RING_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# one HLO op definition: %name = type[shape]{layout} opcode(...operands...)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*\)|[\w\[\],{}\s/#:*]+?)\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string; tuples sum their components."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_WHILE_TUPLE_RE = re.compile(r"=\s*\(([^)]*)\)\s+while\(")
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def estimate_bf16_shadow_bytes(hlo_text: str) -> int:
+    """XLA-CPU float normalisation artifact: the CPU backend has no native
+    bf16, so loop-carried bf16 buffers acquire f32 shadow copies (verified
+    on a minimal pure-bf16 matmul scan — the f32 twin stack appears with
+    no remat and no fp32 ops anywhere in the program).  On the real TPU
+    target these shadows do not exist.  This estimates their total: for
+    every ``while`` carry tuple, sum the sizes of f32 elements whose dims
+    exactly match a bf16 element of the same tuple."""
+    total = 0
+    for m in _WHILE_TUPLE_RE.finditer(hlo_text):
+        elems = _TUPLE_ELEM_RE.findall(m.group(1))
+        bf16_dims = {dims for dt, dims in elems if dt == "bf16"}
+        for dt, dims in elems:
+            if dt == "f32" and dims in bf16_dims and dims:
+                n = 1
+                for d in dims.split(","):
+                    n *= int(d)
+                total += 4 * n
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {kind: {"count": n, "operand_bytes": b, "link_bytes": b*f}}.
+
+    Also aggregates "total" with summed link bytes."""
+    sizes: Dict[str, int] = {}
+    pending: list = []
+
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        sizes[name] = _shape_bytes(type_str)
+        base = opcode.rstrip("-started").rstrip(".")
+        kind = None
+        for ck in COLLECTIVE_KINDS:
+            if opcode == ck or opcode == ck + "-start":
+                kind = ck
+                break
+        if kind is not None:
+            # operand list: up to the matching close paren; names only
+            args = rest.split(")", 1)[0]
+            ops = [o for o in _OPERAND_RE.findall(args) if not o.isdigit()]
+            pending.append((kind, ops))
+        del base
+
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "operand_bytes": 0.0, "link_bytes": 0.0})
+    for kind, ops in pending:
+        b = sum(sizes.get(o, 0) for o in ops)
+        out[kind]["count"] += 1
+        out[kind]["operand_bytes"] += b
+        out[kind]["link_bytes"] += b * RING_FACTOR[kind]
+    total = {"count": sum(v["count"] for v in out.values()),
+             "operand_bytes": sum(v["operand_bytes"] for v in out.values()),
+             "link_bytes": sum(v["link_bytes"] for v in out.values())}
+    result = dict(out)
+    result["total"] = total
+    return result

@@ -1,0 +1,75 @@
+"""Step builders: train (grad + optimizer, microbatched) and serve.
+
+``make_train_step(loss_fn, opt_cfg, n_microbatches)`` returns a pure
+``step(params, opt_state, batch) -> (params, opt_state, metrics)``
+suitable for jit/pjit.  Microbatching reshapes every batch leaf
+``(B, ...) -> (n_mb, B/n_mb, ...)`` and accumulates grads with
+``lax.scan`` — under SPMD this is also what lets XLA overlap each
+microbatch's gradient reduce-scatter with the next microbatch's backward
+(the standard pjit accumulation overlap).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import OptConfig, opt_update
+
+LossFn = Callable[[Any, Any], Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
+
+
+def _split_microbatches(batch, n_mb: int):
+    def r(x):
+        assert x.shape[0] % n_mb == 0, (x.shape, n_mb)
+        return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(loss_fn: LossFn, opt_cfg: OptConfig,
+                    n_microbatches: int = 1) -> Callable:
+    """loss_fn(params, microbatch) -> (loss, metrics dict of scalars)."""
+
+    def step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if n_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, n_microbatches)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(accum, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+
+        new_params, new_state, opt_metrics = opt_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return step
+
+
+def make_eval_step(loss_fn: LossFn) -> Callable:
+    def step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return metrics
+
+    return step

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests must see the real device set (1 CPU device) — the 512-device flag
+# belongs to the dry-run process only (launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,185 @@
+"""Per-architecture smoke tests: REDUCED config, one forward/train step on
+CPU, asserting output shapes and finiteness (the brief's requirement).
+The FULL configs are exercised via the dry-run only."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, get_arch
+
+
+def _finite(x):
+    return bool(jnp.isfinite(jnp.asarray(x, jnp.float32)).all())
+
+
+LM_ARCHS = [a for a, s in REGISTRY.items() if s.family == "lm"]
+RECSYS_ARCHS = [a for a, s in REGISTRY.items() if s.family == "recsys"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_and_decode(arch):
+    from repro.models import transformer as T
+
+    cfg = get_arch(arch).smoke_config_fn()
+    rng = jax.random.PRNGKey(0)
+    params, logical = T.init_params(rng, cfg)
+    assert len(jax.tree.leaves(params)) > 0
+
+    B, S = 2, 32
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+
+    loss, metrics = jax.jit(
+        lambda p: T.loss_fn(p, cfg, tokens, labels))(params)
+    assert _finite(loss) and float(loss) > 0
+    assert _finite(metrics["ppl"])
+
+    logits, aux = T.forward(params, cfg, tokens)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert _finite(logits)
+
+    # one decode step from an empty cache
+    cache = T.init_cache(cfg, B, S)
+    lg, cache2 = jax.jit(
+        lambda p, c: T.decode_step(p, cfg, tokens[:, 0], c))(params, cache)
+    assert lg.shape == (B, cfg.padded_vocab)
+    assert _finite(lg)
+    assert int(cache2["len"][0]) == 1
+
+    # prefill produces a usable cache
+    lg_p, cache_p = T.prefill(params, cfg, tokens, max_len=S + 4)
+    assert lg_p.shape == (B, cfg.padded_vocab)
+    assert _finite(lg_p)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_one_optimizer_step_decreases_nothing_nan(arch):
+    from repro.models import transformer as T
+    from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+    cfg = get_arch(arch).smoke_config_fn()
+    rng = jax.random.PRNGKey(1)
+    params, _ = T.init_params(rng, cfg)
+    opt_cfg = OptConfig(kind="adamw", lr=1e-3, warmup_steps=1)
+    state = opt_init(params, opt_cfg)
+    tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    labels = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+
+    def step(p, s):
+        (loss, m), g = jax.value_and_grad(
+            lambda p_: T.loss_fn(p_, cfg, tokens, labels),
+            has_aux=True)(p)
+        p2, s2, om = opt_update(p, g, s, opt_cfg)
+        return p2, s2, loss
+
+    p2, s2, loss = jax.jit(step)(params, state)
+    assert _finite(loss)
+    assert all(_finite(x) for x in jax.tree.leaves(p2))
+
+
+def test_gnn_smoke_full_and_sampled():
+    from repro.models import gnn as G
+    from repro.data.graph_data import gen_powerlaw_graph, NeighborSampler
+
+    cfg = get_arch("graphsage-reddit").smoke_config_fn()
+    g = gen_powerlaw_graph(80, 4.0, cfg.d_feat, cfg.n_classes, seed=0)
+    params, _ = G.init_params(jax.random.PRNGKey(0), cfg)
+
+    logits = G.forward_full(params, cfg, jnp.asarray(g.x),
+                            jnp.asarray(g.edge_src), jnp.asarray(g.edge_dst))
+    assert logits.shape == (80, cfg.n_classes)
+    assert _finite(logits)
+
+    sampler = NeighborSampler(g.edge_src, g.edge_dst, 80, seed=0)
+    seeds = np.arange(8)
+    feats, masks = sampler.sample_batch(seeds, cfg.fanouts, g.x)
+    logits2 = G.forward_sampled(params, cfg,
+                                tuple(jnp.asarray(f) for f in feats),
+                                tuple(jnp.asarray(m) for m in masks))
+    assert logits2.shape == (8, cfg.n_classes)
+    assert _finite(logits2)
+
+    loss, m = G.loss_full(params, cfg, jnp.asarray(g.x),
+                          jnp.asarray(g.edge_src), jnp.asarray(g.edge_dst),
+                          jnp.asarray(g.labels),
+                          jnp.ones(80, bool))
+    assert _finite(loss)
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke(arch):
+    from repro.models import recsys as R
+    from repro.data import recsys_data as D
+
+    cfg = get_arch(arch).smoke_config_fn()
+    rng = jax.random.PRNGKey(0)
+    B = 8
+
+    if arch == "sasrec":
+        params, _ = R.sasrec_init(rng, cfg)
+        b = D.sasrec_batch(0, B, cfg.seq_len, cfg.n_items, cfg.n_negatives)
+        loss, _ = R.sasrec_loss(params, cfg, b["seq_ids"], b["pos_ids"],
+                                b["neg_ids"])
+        scores = R.sasrec_score(params, cfg, jnp.asarray(b["seq_ids"]))
+        assert scores.shape == (B, cfg.n_items)
+    elif arch == "din":
+        params, _ = R.din_init(rng, cfg)
+        b = D.din_batch(0, B, cfg.seq_len, cfg.n_items, cfg.n_context,
+                        cfg.n_context_fields)
+        loss, _ = R.din_loss(params, cfg, b["hist_ids"], b["target_id"],
+                             b["ctx_ids"], b["labels"])
+        sc = R.din_score_candidates(params, cfg,
+                                    jnp.asarray(b["hist_ids"][:1]),
+                                    jnp.asarray(b["ctx_ids"][:1]),
+                                    jnp.arange(64))
+        assert sc.shape == (64,)
+    elif arch == "xdeepfm":
+        params, _ = R.xdeepfm_init(rng, cfg)
+        b = D.xdeepfm_batch(0, B, cfg.n_fields, cfg.vocab_per_field)
+        loss, _ = R.xdeepfm_loss(params, cfg, b["field_ids"], b["labels"])
+        logits = R.xdeepfm_forward(params, cfg, jnp.asarray(b["field_ids"]))
+        assert logits.shape == (B,)
+    else:
+        params, _ = R.twotower_init(rng, cfg)
+        b = D.twotower_batch(0, B, cfg.n_users, cfg.n_items,
+                             cfg.n_user_hist)
+        loss, _ = R.twotower_loss(params, cfg, b["user_id"], b["hist_ids"],
+                                  b["hist_mask"], b["pos_item"],
+                                  b["item_logq"])
+        vals, idx = R.retrieval_scores(params, cfg, b["user_id"][:1],
+                                       b["hist_ids"][:1], b["hist_mask"][:1],
+                                       jnp.arange(cfg.n_items), topk=10)
+        assert vals.shape == (1, 10)
+    assert _finite(loss) and float(loss) > 0
+
+
+def test_fim_smoke_mining_round_single_device():
+    """The paper's workload lowers and runs on a 1x1 mesh."""
+    import jax
+    import numpy as np
+    from repro.core.distributed import make_mining_round
+    from repro.core.bitmap import pack_tidlists, popcount32_np
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    round_fn = jax.jit(make_mining_round(mesh, pair_chunk=8))
+    rng = np.random.default_rng(0)
+    store = rng.integers(0, 2 ** 32, (16, 2, 8), dtype=np.uint64
+                         ).astype(np.uint32)
+    pairs = np.stack([rng.integers(0, 16, 16), rng.integers(0, 16, 16)],
+                     1).astype(np.int32)
+    rho = np.zeros(16, np.int32)
+    bound, counts = round_fn(store, pairs, rho)
+    expect = popcount32_np(store[pairs[:, 0]] & store[pairs[:, 1]]
+                           ).reshape(16, -1).sum(1)
+    assert np.array_equal(np.asarray(counts), expect)
+    assert (np.asarray(bound) >= expect).all()
+
+
+def test_all_assigned_archs_have_smoke_and_cells():
+    from repro.configs import ASSIGNED_ARCHS, all_cells
+    assert len(ASSIGNED_ARCHS) == 10
+    cells = [c for c in all_cells(include_fim=False)]
+    assert len(cells) == 40     # 10 archs x 4 shapes each

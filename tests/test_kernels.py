@@ -1,0 +1,147 @@
+"""Per-kernel allclose sweeps: Pallas (interpret) vs pure-jnp oracles."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitmap import (pack_tidlists, suffix_popcounts_np,
+                               popcount32_np, unpack_row)
+from repro.kernels import ops
+from repro.kernels.ref import (bitmap_intersect_es_ref, flash_attention_ref,
+                               embedding_bag_ref, screen_pairs_ref)
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.segment_embed import embedding_bag
+
+
+# ---------------------------------------------------------------------------
+# bitmap intersection kernel: bit-exact across modes / shapes / minsup
+# ---------------------------------------------------------------------------
+
+def _random_bitmaps(rng, n_pairs, n_blocks, bw, density=0.25):
+    u = rng.integers(0, 2 ** 32, (n_pairs, n_blocks, bw),
+                     dtype=np.uint64).astype(np.uint32)
+    m = rng.integers(0, 2 ** 32, (n_pairs, n_blocks, bw),
+                     dtype=np.uint64).astype(np.uint32)
+    if density < 0.5:
+        u &= m
+    return u
+
+
+@pytest.mark.parametrize("mode", ["and", "andnot"])
+@pytest.mark.parametrize("n_blocks,bw", [(1, 128), (3, 128), (5, 8)])
+def test_bitmap_kernel_matches_ref(mode, n_blocks, bw):
+    rng = np.random.default_rng(42)
+    n_pairs = 7
+    U = _random_bitmaps(rng, n_pairs, n_blocks, bw)
+    V = _random_bitmaps(rng, n_pairs, n_blocks, bw)
+    su = suffix_popcounts_np(U)
+    sv = suffix_popcounts_np(V)
+    rho = popcount32_np(U).reshape(n_pairs, -1).sum(1).astype(np.int32)
+    n_trans = n_blocks * bw * 32
+    for minsup in (0, 1, n_trans // 64, n_trans // 8, n_trans):
+        r = bitmap_intersect_es_ref(U, V, su, sv, rho, jnp.int32(minsup),
+                                    mode=mode)
+        p = ops.bitmap_intersect_es(U, V, su, sv, rho, jnp.int32(minsup),
+                                    mode=mode, backend="pallas")
+        for name, a, b in zip(("Z", "cnt", "blocks", "alive"), r, p):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                mode, minsup, name)
+
+
+def test_bitmap_kernel_es_aborts_and_freezes():
+    """Dead pairs stop processing blocks and freeze counts (the paper's
+    semantics quantised to blocks)."""
+    rng = np.random.default_rng(0)
+    U = _random_bitmaps(rng, 16, 6, 8, density=0.2)
+    V = _random_bitmaps(rng, 16, 6, 8, density=0.2)
+    su, sv = suffix_popcounts_np(U), suffix_popcounts_np(V)
+    rho = np.zeros(16, np.int32)
+    minsup = 6 * 8 * 32 // 4   # high threshold: most pairs die early
+    Z, cnt, blocks, alive = ops.bitmap_intersect_es(
+        U, V, su, sv, rho, jnp.int32(minsup), mode="and", backend="pallas")
+    blocks = np.asarray(blocks)
+    assert (blocks < 6).any()
+    # dead pairs: output blocks beyond the abort point are zeroed
+    Z = np.asarray(Z)
+    for i in range(16):
+        if blocks[i] < 6:
+            assert not Z[i, blocks[i]:].any()
+
+
+def test_screen_bound_is_sound():
+    rng = np.random.default_rng(1)
+    U = _random_bitmaps(rng, 32, 4, 16)
+    V = _random_bitmaps(rng, 32, 4, 16)
+    su, sv = suffix_popcounts_np(U), suffix_popcounts_np(V)
+    true_count = popcount32_np(U & V).reshape(32, -1).sum(1)
+    bound, _ = screen_pairs_ref(U[:, 0], V[:, 0], su[:, 1], sv[:, 1],
+                                np.zeros(32, np.int32), jnp.int32(0))
+    assert (np.asarray(bound) >= true_count).all()
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(2)
+    tids = sorted(rng.choice(5000, size=700, replace=False).tolist())
+    packed = pack_tidlists([tids], 5000, block_words=8)
+    assert unpack_row(packed[0]).tolist() == tids
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 999), min_size=0, max_size=200,
+                unique=True))
+def test_pack_popcount_property(tids):
+    packed = pack_tidlists([sorted(tids)], 1000, block_words=4)
+    assert popcount32_np(packed).sum() == len(tids)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "B,Sq,Skv,H,KH,D,Dv,causal,dtype,tol",
+    [
+        (2, 128, 128, 4, 2, 32, 32, True, jnp.float32, 2e-5),
+        (1, 256, 256, 8, 8, 64, 64, True, jnp.float32, 2e-5),
+        (2, 128, 256, 4, 1, 32, 16, False, jnp.float32, 2e-5),
+        (1, 128, 128, 4, 4, 128, 128, True, jnp.float32, 2e-5),
+        (1, 128, 128, 4, 2, 32, 32, True, jnp.bfloat16, 3e-2),
+    ])
+def test_flash_attention_sweep(B, Sq, Skv, H, KH, D, Dv, causal, dtype, tol):
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Skv, KH, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Skv, KH, Dv)), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_block=64, kv_block=64)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max())
+    assert err < tol, err
+
+
+# ---------------------------------------------------------------------------
+# embedding bag kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("V,D,B,L,comb", [
+    (100, 16, 8, 5, "mean"), (64, 32, 16, 9, "sum"),
+    (257, 8, 4, 3, "mean"), (1000, 64, 8, 20, "mean"),
+])
+def test_embedding_bag_sweep(V, D, B, L, comb):
+    rng = np.random.default_rng(4)
+    table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, V, (B, L)), jnp.int32)
+    mask = jnp.asarray(rng.random((B, L)) < 0.8)
+    out = embedding_bag(table, ids, mask, combiner=comb, bag_block=4)
+    ref = embedding_bag_ref(table, ids, mask, combiner=comb)
+    assert float(jnp.abs(out - ref).max()) < 1e-5
+
+
+def test_embedding_bag_all_masked_bag():
+    table = jnp.ones((8, 4), jnp.float32)
+    ids = jnp.zeros((2, 3), jnp.int32)
+    mask = jnp.asarray([[False] * 3, [True] * 3])
+    out = embedding_bag(table, ids, mask, combiner="mean", bag_block=2)
+    assert float(out[0].sum()) == 0.0
+    assert float(out[1, 0]) == 1.0

@@ -1,0 +1,173 @@
+"""Model semantics: decode==forward, prefill->decode, MoE invariants."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (LMConfig, init_params, forward,
+                                      prefill, init_cache, decode_step)
+from repro.models import layers as L
+
+
+def _decode_all(cfg, params, tokens, max_len=None):
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len or S)
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    out = []
+    for i in range(S):
+        lg, cache = step(params, tokens[:, i], cache)
+        out.append(lg)
+    return jnp.stack(out, 1), cache
+
+
+CFGS = {
+    "gqa-bias": LMConfig(name="t", n_layers=3, d_model=64, n_heads=4,
+                         n_kv_heads=2, d_ff=128, vocab_size=101,
+                         qkv_bias=True, tie_embeddings=True, attn_chunk=8,
+                         dtype="float32", remat="none"),
+    "mla": LMConfig(name="t2", n_layers=3, d_model=64, n_heads=4,
+                    n_kv_heads=4, d_ff=128, vocab_size=101, mla=True,
+                    q_lora=32, kv_lora=16, qk_nope_dim=16, qk_rope_dim=8,
+                    v_head_dim=16, attn_chunk=8, dtype="float32",
+                    remat="none"),
+    "swa": LMConfig(name="t3", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, d_ff=128, vocab_size=101,
+                    sliding_window=8, attn_chunk=8, dtype="float32",
+                    remat="none"),
+    "moe": LMConfig(name="t4", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, d_ff=128, vocab_size=101, moe=True,
+                    n_experts=4, top_k=2, moe_d_ff=64, capacity_factor=8.0,
+                    attn_chunk=8, dtype="float32", remat="none"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CFGS))
+def test_decode_matches_forward(name):
+    cfg = CFGS[name]
+    rng = jax.random.PRNGKey(0)
+    params, _ = init_params(jax.random.PRNGKey(1), cfg)
+    tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    ref, _ = forward(params, cfg, tokens)
+    dec, _ = _decode_all(cfg, params, tokens)
+    scale = float(jnp.abs(ref).max())
+    err = float(jnp.abs(dec - ref).max()) / max(scale, 1e-6)
+    # MLA decode uses the ABSORBED formulation (different matmul
+    # association): a few % relative drift at these tiny latent dims is
+    # expected; greedy decisions must still agree exactly.
+    tol = 3e-2 if name == "mla" else 3e-3
+    assert err < tol, err
+    agree = (dec.argmax(-1) == ref.argmax(-1)).mean()
+    assert float(agree) > 0.98
+
+
+@pytest.mark.parametrize("name", sorted(CFGS))
+def test_prefill_then_decode_matches_forward(name):
+    cfg = CFGS[name]
+    rng = jax.random.PRNGKey(0)
+    params, _ = init_params(jax.random.PRNGKey(2), cfg)
+    tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    ref, _ = forward(params, cfg, tokens)
+    lg, cache = jax.jit(
+        lambda p, t: prefill(p, cfg, t, max_len=16))(params, tokens[:, :12])
+    scale = float(jnp.abs(ref).max())
+    errs = [float(jnp.abs(lg - ref[:, 11]).max()) / scale]
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    for i in range(12, 16):
+        lg, cache = step(params, tokens[:, i], cache)
+        errs.append(float(jnp.abs(lg - ref[:, i]).max()) / scale)
+    assert max(errs) < (3e-2 if name == "mla" else 3e-3), errs
+
+
+def test_remat_does_not_change_loss():
+    from repro.models.transformer import loss_fn
+    import dataclasses
+    cfg = CFGS["gqa-bias"]
+    params, _ = init_params(jax.random.PRNGKey(3), cfg)
+    rng = jax.random.PRNGKey(4)
+    tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    labels = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    vals = {}
+    for remat in ("none", "dots", "full"):
+        c = dataclasses.replace(cfg, remat=remat)
+        (l, _), g = jax.value_and_grad(
+            lambda p: loss_fn(p, c, tokens, labels), has_aux=True)(params)
+        vals[remat] = (float(l), float(jnp.abs(
+            jax.tree.leaves(g)[0]).sum()))
+    assert vals["none"] == pytest.approx(vals["dots"], rel=1e-6)
+    assert vals["none"] == pytest.approx(vals["full"], rel=1e-6)
+
+
+def test_unroll_layers_matches_scan():
+    import dataclasses
+    cfg = CFGS["moe"]
+    params, _ = init_params(jax.random.PRNGKey(5), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (2, 16), 0, 101)
+    a, _ = forward(params, cfg, tokens)
+    b, _ = forward(params, dataclasses.replace(cfg, unroll_layers=True),
+                   tokens)
+    assert float(jnp.abs(a - b).max()) < 1e-5
+
+
+def test_moe_group_invariance_without_drops():
+    """With capacity high enough for zero drops, the grouped dispatch must
+    be exact regardless of group count."""
+    dims = L.MoEDims(d_model=32, n_experts=4, top_k=2, d_ff=16,
+                     capacity_factor=16.0, dispatch_groups=1)
+    rng = jax.random.PRNGKey(0)
+    p, _ = L.moe_init(rng, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    import dataclasses
+    y1, _ = L.moe_apply(p, x, dims, compute_dtype=jnp.float32)
+    y4, _ = L.moe_apply(p, x, dataclasses.replace(dims, dispatch_groups=4),
+                        compute_dtype=jnp.float32)
+    assert float(jnp.abs(y1 - y4).max()) < 1e-5
+
+
+def test_moe_matches_dense_expert_sum():
+    """Grouped sort-based MoE == explicit per-token expert mixture."""
+    dims = L.MoEDims(d_model=16, n_experts=4, top_k=2, d_ff=8,
+                     capacity_factor=16.0, dispatch_groups=2)
+    p, _ = L.moe_init(jax.random.PRNGKey(0), dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 16))
+    y, _ = L.moe_apply(p, x, dims, compute_dtype=jnp.float32)
+
+    xt = x.reshape(-1, 16)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, ids = jax.lax.top_k(probs, 2)
+    gates = gates / gates.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xt)
+    for e in range(4):
+        g = jax.nn.silu(xt @ p["w_gate"][e]) * (xt @ p["w_up"][e])
+        ye = g @ p["w_down"][e]
+        w = ((ids == e) * gates).sum(-1)
+        ref = ref + ye * w[:, None]
+    assert float(jnp.abs(y.reshape(-1, 16) - ref).max()) < 1e-4
+
+
+def test_rmsnorm_custom_vjp_matches_autodiff():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+    sc = jax.random.normal(jax.random.PRNGKey(1), (64,)) * 0.1 + 1.0
+
+    def ref(x, sc):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, -1, keepdims=True)
+        return (xf * jax.lax.rsqrt(var + 1e-5) * sc).astype(x.dtype)
+
+    f = lambda x, sc: (L.rmsnorm({"scale": sc}, x) ** 2).sum()  # noqa: E731
+    fr = lambda x, sc: (ref(x, sc) ** 2).sum()                  # noqa: E731
+    gx, gs = jax.grad(f, (0, 1))(x, sc)
+    rx, rs = jax.grad(fr, (0, 1))(x, sc)
+    np.testing.assert_allclose(gx, rx, atol=1e-4)
+    np.testing.assert_allclose(gs, rs, atol=1e-3)
+
+
+def test_swa_ring_cache_bounded():
+    cfg = CFGS["swa"]
+    params, _ = init_params(jax.random.PRNGKey(7), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (1, 24), 0, 101)
+    _, cache = _decode_all(cfg, params, tokens, max_len=24)
+    # ring cache never exceeds the window regardless of decode length
+    assert cache["k"].shape[2] == cfg.sliding_window
+    assert int(cache["len"][0]) == 24

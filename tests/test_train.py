@@ -1,0 +1,161 @@
+"""Training substrate: optimizers, microbatching, checkpoint/restart."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import (OptConfig, opt_init, opt_update, lr_at,
+                                   clip_by_global_norm, opt_state_logical)
+from repro.train.train_step import make_train_step
+from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
+                                    latest_step, AsyncCheckpointer)
+
+
+def _quadratic_problem(seed=0):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(8, 8)) / 4 + np.eye(8), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+
+    def loss_fn(params, batch):
+        r = A @ params["w"] - b + 0 * batch["x"].sum()
+        return (r ** 2).sum(), {"r": (r ** 2).sum()}
+
+    params = {"w": jnp.zeros((8,), jnp.float32)}
+    return loss_fn, params
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+def test_optimizer_converges_on_quadratic(kind):
+    loss_fn, params = _quadratic_problem()
+    cfg = OptConfig(kind=kind, lr=0.05, warmup_steps=5, decay_steps=400,
+                    weight_decay=0.0, grad_clip=100.0)
+    step = jax.jit(make_train_step(loss_fn, cfg))
+    state = opt_init(params, cfg)
+    batch = {"x": jnp.zeros((4, 1))}
+    losses = []
+    for _ in range(300):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.05
+    assert np.isfinite(losses).all()
+
+
+def test_microbatching_matches_full_batch_grads():
+    """n_mb gradient accumulation == single big batch (linear loss avg)."""
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return ((pred - batch["y"]) ** 2).mean(), {}
+
+    params = {"w": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    cfg = OptConfig(kind="adamw", lr=1e-2, weight_decay=0.0)
+    batch = {"x": X, "y": y}
+
+    p1, s1, _ = jax.jit(make_train_step(loss_fn, cfg, 1))(
+        params, opt_init(params, cfg), batch)
+    p4, s4, _ = jax.jit(make_train_step(loss_fn, cfg, 4))(
+        params, opt_init(params, cfg), batch)
+    np.testing.assert_allclose(p1["w"], p4["w"], rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                    min_lr_frac=0.1)
+    assert float(lr_at(cfg, jnp.int32(0))) == 0.0
+    assert float(lr_at(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(lr_at(cfg, jnp.int32(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0,
+                                                                 rel=1e-5)
+
+
+def test_opt_state_logical_mirrors_params():
+    logical = {"w": ("embed", "ff"), "b": ("ff",)}
+    adamw = opt_state_logical(logical, OptConfig(kind="adamw"))
+    assert adamw["mu"] == logical
+    fac = opt_state_logical(logical, OptConfig(kind="adafactor"))
+    assert fac["v"]["w"] == {"vr": ("embed",), "vc": ("ff",)}
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _state(seed):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(4, 4)), jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=(4,)), jnp.bfloat16)},
+        "opt": {"step": jnp.int32(7)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    state = _state(0)
+    save_checkpoint(d, 7, state, extra={"mesh": [1, 1]})
+    template = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    restored, step, extra = restore_checkpoint(d, template)
+    assert step == 7 and extra == {"mesh": [1, 1]}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_rotation_and_latest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, _state(s), keep=2)
+    assert latest_step(d) == 5
+    kept = sorted(x for x in os.listdir(d) if x.startswith("step-"))
+    assert len(kept) == 2
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _state(1))
+    assert not [x for x in os.listdir(d) if x.startswith("tmp-")]
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "ckpt")
+    ck = AsyncCheckpointer(d, keep=2)
+    for s in (10, 20):
+        ck.save(s, _state(s), extra={"s": s})
+    ck.wait()
+    assert latest_step(d) == 20
+    restored, step, extra = restore_checkpoint(d, _state(0))
+    assert extra["s"] == 20
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(d, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Checkpoints are mesh-agnostic: restore re-places leaves onto the
+    current device set (pod count can change between runs)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    d = str(tmp_path / "ckpt")
+    state = _state(3)
+    save_checkpoint(d, 1, state)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), state)
+    restored, _, _ = restore_checkpoint(d, state, shardings=sh)
+    for leaf in jax.tree.leaves(restored):
+        assert leaf.sharding.mesh.shape == mesh.shape
