@@ -53,7 +53,38 @@ def bench_bitmap(n_pairs=4096, n_blocks=8, bw=128) -> List[str]:
         Uj[:, 0], Vj[:, 0], su[:, 1], sv[:, 1], rho, jnp.int32(64))[0])
     out.append(f"kernels/bitmap_screen/{n_pairs}x{bw},"
                f"{dt*1e6:.0f},Gword_s={n_pairs*bw/dt/1e9:.2f}")
+    out.extend(bench_fused_store(n_pairs=n_pairs, n_blocks=n_blocks, bw=bw))
     return out
+
+
+def bench_fused_store(n_pairs=4096, n_blocks=8, bw=128) -> List[str]:
+    """The mining hot path: one fused gather+screen+intersect+scatter
+    dispatch against a device-resident row store.  Donation means fresh
+    operand slabs per call, so this times the full chunk round-trip the
+    miner actually pays (minus the tiny count/alive readback)."""
+    from repro.core.rowstore import DeviceRowStore
+    rng = np.random.default_rng(4)
+    cap = 2 * n_pairs
+    rows = rng.integers(0, 2 ** 32, (n_pairs, n_blocks, bw),
+                        dtype=np.uint64).astype(np.uint32)
+    ua = rng.integers(0, n_pairs, n_pairs).astype(np.int32)
+    vb = rng.integers(0, n_pairs, n_pairs).astype(np.int32)
+    slots = np.arange(n_pairs, 2 * n_pairs, dtype=np.int32)
+    words = n_pairs * n_blocks * bw
+
+    def run():
+        store = DeviceRowStore(rows, capacity=cap)
+        rho = np.asarray(store.suffix[ua, 0], np.int32)
+        t0 = time.perf_counter()
+        r = ops.screen_and_intersect(store.rows, store.suffix, ua, vb,
+                                     slots, rho, jnp.int32(64), mode="and")
+        jax.block_until_ready(r)
+        return time.perf_counter() - t0
+
+    run()                      # compile
+    dt = min(run() for _ in range(5))
+    return [f"kernels/fused_screen_intersect/{n_pairs}x{n_blocks}x{bw},"
+            f"{dt*1e6:.0f},Gword_s={words/dt/1e9:.2f}"]
 
 
 def bench_attention(B=2, S=1024, H=8, KH=2, D=64) -> List[str]:

@@ -15,6 +15,9 @@ container); the paper's qualitative claims under test:
 
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 from typing import Dict, List
 
@@ -97,6 +100,67 @@ def figures(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
+    """CI benchmark smoke: tiny sparse synthetic DB through the
+    device-resident engine, ES vs full.
+
+    Hard-asserts the paper's headline effect (``word_ops_saved_frac > 0``
+    for the ES engine vs the non-ES full run, identical result sets) and
+    writes the stats JSON so every CI run leaves a bench artifact.
+    """
+    from repro.data.transactions import gen_powerlaw_baskets
+
+    db = gen_powerlaw_baskets(n_trans=800, n_items=400, avg_trans_len=8,
+                              seed=0)
+    minsup = max(2, int(round(0.004 * len(db))))
+    t0 = time.perf_counter()
+    out_es, st_es = mine_bitmap(db, minsup, "eclat", early_stop=True,
+                                block_words=8)
+    t_es = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_no, st_no = mine_bitmap(db, minsup, "eclat", early_stop=False,
+                                block_words=8)
+    t_no = time.perf_counter() - t0
+
+    assert out_es == out_no, "ES changed the result set"
+    assert st_es.word_ops_saved_frac > 0, (
+        f"ES saved no word ops: {st_es.as_dict()}")
+    assert st_es.word_ops < st_no.word_ops
+
+    report = {
+        "dataset": {"family": "powerlaw", "n_trans": len(db),
+                    "n_items": 400, "minsup": minsup},
+        "frequent_itemsets": len(out_es),
+        "es": {**st_es.as_dict(), "wall_s": round(t_es, 3)},
+        "full": {**st_no.as_dict(), "wall_s": round(t_no, 3)},
+        "word_ops_saved_frac": st_es.word_ops_saved_frac,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"smoke ok: word_ops_saved_frac="
+          f"{st_es.word_ops_saved_frac:.3f}, "
+          f"device_calls={st_es.device_calls}, F={len(out_es)} "
+          f"-> {out_path}", file=sys.stderr)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic dataset; assert ES word-op "
+                         "savings and write a BENCH_*.json artifact")
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="smoke-mode JSON output path")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke(args.out)
+        return
+    print("full paper sweep lives in benchmarks/run.py "
+          "(python -m benchmarks.run --sections paper); "
+          "use --smoke for the CI smoke bench", file=sys.stderr)
+    sys.exit(2)
+
+
 def csv_rows(rows: List[Dict]) -> List[str]:
     """name,us_per_call,derived lines for benchmarks.run."""
     out = []
@@ -107,3 +171,7 @@ def csv_rows(rows: List[Dict]) -> List[str]:
                 f"paper/{r['dataset']}/ms{r['minsup_level']}/{scheme},"
                 f"{us:.0f},comparisons={v['comparisons']};F={v['F']}")
     return out
+
+
+if __name__ == "__main__":
+    main()

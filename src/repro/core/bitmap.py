@@ -18,6 +18,13 @@ Layout
 
 ``block_words`` defaults to 128 words = 4096 transactions per block so a
 block is exactly one 8x128 VPU-aligned uint32 tile row-group.
+
+Residency: on the mining hot path both slabs are *device-resident* — rows
+and suffix tables live in ``core.rowstore.DeviceRowStore`` and are
+gathered/scattered by row index inside the fused dispatch
+(``kernels.ops.screen_and_intersect``).  :func:`suffix_popcounts` is the
+device producer of the suffix slab; :func:`suffix_popcounts_np` is its
+host mirror, kept for packing-time code and tests.
 """
 
 from __future__ import annotations

@@ -1,24 +1,35 @@
 """Device bitmap miners: Eclat and dEclat with block-level early stopping.
 
 Host/DFS split (DESIGN.md §2): the equivalence-class depth-first search
-stays on the host (Python), but candidate evaluation is batched at the
-*class* level — every sibling pair (a, b), a<b, of one equivalence class
-goes to the device in a handful of chunked calls.  Early stopping appears
-at two levels:
+stays on the host (Python), but the host only ever handles row *indices*
+and small int vectors — every bitmap row lives in a device-resident
+``DeviceRowStore`` slab (core/rowstore.py) from the moment the level-1
+TID bitmaps are uploaded until the slot is free-listed.  Candidate
+evaluation is batched at the *class* level: every sibling pair (a, b),
+a<b, of one equivalence class goes to the device in chunked calls, and
+each chunk is exactly **one** device dispatch
+(``kernels.ops.screen_and_intersect``):
 
-  * inter-call screening: a one-block bound kills most infrequent pairs
-    before the full intersection is materialised (pairs are compacted on
-    the host, so screened-out pairs cost zero further device work);
-  * intra-call blocking: the kernel walks TID blocks and aborts a pair the
-    moment its suffix bound drops below minsup.
+  * gather: operand rows + suffix tables are picked out of the slab by
+    index (no host U/V materialisation, no re-upload);
+  * screen: the kernel evaluates the one-block bound first — a pair whose
+    block-0 bound misses minsup dies with ``blocks_done == 1`` and costs
+    no further blocks;
+  * blocked ES: surviving pairs walk TID blocks and abort the moment the
+    suffix bound drops below minsup (the paper's INTERSECT_ES /
+    DIFFERENCE_ES quantised to blocks);
+  * scatter: child rows *and* their suffix-popcount tables are computed
+    on device and written into preallocated slots of the same slab.
 
-The two together are the batched TPU translation of the paper's
-INTERSECT_ES / DIFFERENCE_ES.
+Slots are allocated pessimistically (one per candidate pair) before the
+dispatch and the dead ones are returned to the free list right after —
+free-list traffic is pure host bookkeeping, so infrequent candidates
+still cost zero extra device work.
 
 Work metric: ``word_ops`` — uint32 word operations actually performed
-(blocks_done x block_words per pair; one block per pair for the screen).
-This is the device analogue of the paper's #comparisons and is what
-benchmarks/bench_comparisons.py reports next to the oracle's exact
+(blocks_done x block_words per pair; the fused screen is block 0 of the
+same scan).  This is the device analogue of the paper's #comparisons and
+is what benchmarks/bench_paper.py reports next to the oracle's exact
 counter.
 """
 
@@ -32,8 +43,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.bitmap import (BitmapDB, DEFAULT_BLOCK_WORDS,
-                               suffix_popcounts_np)
+from repro.core.bitmap import BitmapDB, DEFAULT_BLOCK_WORDS
+from repro.core.rowstore import DeviceRowStore
 from repro.kernels import ops
 
 ItemsetSupports = Dict[FrozenSet[Hashable], int]
@@ -49,10 +60,12 @@ class DeviceMiningStats:
     candidates: int = 0
     nodes: int = 0
     screened_out: int = 0        # pairs killed by the one-block screen
-    kernel_aborts: int = 0       # pairs killed inside the blocked kernel
+    kernel_aborts: int = 0       # pairs killed past block 0
     word_ops: int = 0            # uint32 ops actually performed
     word_ops_full: int = 0       # what a non-ES engine would have performed
     device_calls: int = 0
+    store_grows: int = 0         # row-store slab reallocations
+    peak_rows: int = 0           # peak live rows in the store
     runtime_s: float = 0.0
 
     @property
@@ -76,35 +89,38 @@ class DeviceMiningStats:
             "word_ops_full": self.word_ops_full,
             "word_ops_saved_frac": round(self.word_ops_saved_frac, 4),
             "device_calls": self.device_calls,
+            "store_grows": self.store_grows,
+            "peak_rows": self.peak_rows,
             "runtime_s": round(self.runtime_s, 6),
         }
 
 
-def _bucket_pad(arr: np.ndarray, n: int) -> np.ndarray:
+def _bucket_pad(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
     for b in _PAIR_BUCKETS:
         if n <= b:
             if n == b:
                 return arr
             pad_shape = (b - n,) + arr.shape[1:]
-            return np.concatenate([arr, np.zeros(pad_shape, arr.dtype)])
+            return np.concatenate([arr, np.full(pad_shape, fill, arr.dtype)])
     raise ValueError(f"batch of {n} exceeds largest bucket")
 
 
 @dataclass
 class _Class:
     """One equivalence class: members share a prefix (Eclat) and are kept
-    in search order.  Rows are TID bitmaps (Eclat, dEclat level 1) or
-    diffsets (dEclat level >= 2)."""
+    in search order.  ``row_ids`` are slots in the device row store
+    holding TID bitmaps (Eclat, dEclat level 1) or diffsets (dEclat
+    level >= 2) — contents never leave the device."""
 
     itemsets: List[Tuple[Hashable, ...]]
-    rows: np.ndarray          # uint32 (m, n_blocks, bw)
-    suffix: np.ndarray        # int32  (m, n_blocks + 1)
-    supports: np.ndarray      # int32  (m,)
+    row_ids: np.ndarray       # int32 (m,) store slots
+    supports: np.ndarray      # int32 (m,)
     is_tidlist: bool
 
 
 class BitmapMiner:
-    """Eclat / dEclat over packed bitmaps with two-level early stopping."""
+    """Eclat / dEclat over a device-resident row store with fused
+    screen+intersect early stopping."""
 
     def __init__(self, scheme: str = "eclat", early_stop: bool = True,
                  block_words: int = DEFAULT_BLOCK_WORDS,
@@ -117,9 +133,9 @@ class BitmapMiner:
         self.block_words = block_words
         self.pair_chunk = min(pair_chunk, _PAIR_BUCKETS[-1])
         self.backend = backend
-        # metrics=True runs the blocked ES kernel so blocks_done/word_ops are
-        # exact; metrics=False takes the fused fast path (ES savings come
-        # from the screen alone — the production CPU configuration).
+        # The fused dispatch returns exact blocks_done/word_ops for free;
+        # ``metrics`` is kept for API compatibility and no longer selects
+        # a separate (two-dispatch) fast path.
         self.metrics = metrics
 
     def mine(self, db: Sequence[Sequence[Hashable]], minsup: int,
@@ -135,15 +151,19 @@ class BitmapMiner:
             out[frozenset((item,))] = int(bdb.supports[r])
             stats.nodes += 1
 
+        store = DeviceRowStore(
+            bdb.bitmaps,
+            capacity=bdb.n_items + min(self.pair_chunk, 4096))
         root = _Class(
             itemsets=[(it,) for it in bdb.items],
-            rows=bdb.bitmaps,
-            suffix=suffix_popcounts_np(bdb.bitmaps),
+            row_ids=np.arange(bdb.n_items, dtype=np.int32),
             supports=bdb.supports.astype(np.int32),
             is_tidlist=True)
         self._minsup = minsup
         self._n_blocks = bdb.n_blocks
-        self._traverse(root, out, stats)
+        self._traverse(store, root, out, stats)
+        stats.store_grows = store.grows
+        stats.peak_rows = store.peak_live
         stats.runtime_s = time.perf_counter() - t0
         return out, stats
 
@@ -156,9 +176,14 @@ class BitmapMiner:
     # amortises launch latency; on CPU it is the difference between
     # dispatch-bound and compute-bound mining.  Result sets are order-
     # independent, so draining order does not affect correctness.
+    #
+    # Row lifetime: a class's member rows are operands only for that
+    # class's own pair batch, so they are free-listed as soon as the drain
+    # group that consumed them completes; child slots live until the child
+    # class is drained in turn.
 
-    def _traverse(self, root: _Class, out: ItemsetSupports,
-                  stats: DeviceMiningStats) -> None:
+    def _traverse(self, store: DeviceRowStore, root: _Class,
+                  out: ItemsetSupports, stats: DeviceMiningStats) -> None:
         stack: List[_Class] = [root]
         while stack:
             # -- drain classes until one pair_chunk is filled --------------
@@ -168,17 +193,14 @@ class BitmapMiner:
                 klass = stack.pop()
                 m = len(klass.itemsets)
                 if m < 2:
+                    store.free(klass.row_ids)      # leaf: rows are done
                     continue
                 drained.append(klass)
                 total += m * (m - 1) // 2
             if not drained:
                 continue
 
-            # -- merge all pairs into global index arrays -------------------
-            offs = np.cumsum([0] + [len(k.itemsets) for k in drained])
-            rows_cat = np.concatenate([k.rows for k in drained])
-            suf_cat = np.concatenate([k.suffix for k in drained])
-            sup_cat = np.concatenate([k.supports for k in drained])
+            # -- merge all pairs into global slot-index arrays --------------
             ua_l, vb_l, rho_l, meta = [], [], [], []
             for ci, klass in enumerate(drained):
                 m = len(klass.itemsets)
@@ -191,116 +213,90 @@ class BitmapMiner:
                     ua, vb = ia, ib
                 else:
                     ua, vb = ib, ia
-                ua_l.append(ua + offs[ci])
-                vb_l.append(vb + offs[ci])
+                ua_l.append(klass.row_ids[ua])
+                vb_l.append(klass.row_ids[vb])
                 rho_l.append(klass.supports[ia])
                 meta.extend((ci, int(a), int(b)) for a, b in zip(ia, ib))
-            ua_g = np.concatenate(ua_l)
-            vb_g = np.concatenate(vb_l)
+            ua_g = np.concatenate(ua_l).astype(np.int32)
+            vb_g = np.concatenate(vb_l).astype(np.int32)
             rho_g = np.concatenate(rho_l).astype(np.int32)
 
-            # -- chunked device evaluation ---------------------------------
-            pend: List[Tuple[int, int, np.ndarray, int, Tuple]] = []
+            # -- chunked device evaluation: ONE dispatch per chunk ---------
+            pend: List[Tuple[int, int, int, int, Tuple]] = []
             groups: Dict[Tuple[int, int], List[int]] = {}
             for lo in range(0, ua_g.size, self.pair_chunk):
                 sl = slice(lo, lo + self.pair_chunk)
-                rows_f, sup_f, kept = self._eval_pairs(
-                    rows_cat, suf_cat, ua_g[sl], vb_g[sl], rho_g[sl], stats)
-                for r, s, ki in zip(rows_f, sup_f, kept):
+                slots_f, sup_f, kept = self._eval_pairs(
+                    store, ua_g[sl], vb_g[sl], rho_g[sl], stats)
+                for slot, s, ki in zip(slots_f, sup_f, kept):
                     ci, a, b = meta[lo + ki]
                     klass = drained[ci]
                     cs = klass.itemsets[a] + (klass.itemsets[b][-1],)
                     out[frozenset(cs)] = s
                     stats.nodes += 1
                     groups.setdefault((ci, a), []).append(len(pend))
-                    pend.append((ci, a, r, s, cs))
-            del rows_cat, suf_cat, sup_cat
+                    pend.append((ci, a, slot, s, cs))
 
             # -- form child classes and push --------------------------------
             for _key, idxs in groups.items():
-                rows = np.stack([pend[i][2] for i in idxs])
                 stack.append(_Class(
                     itemsets=[pend[i][4] for i in idxs],
-                    rows=rows,
-                    suffix=suffix_popcounts_np(rows),
+                    row_ids=np.asarray([pend[i][2] for i in idxs], np.int32),
                     supports=np.asarray([pend[i][3] for i in idxs],
                                         np.int32),
                     is_tidlist=False))
 
-    def _eval_pairs(self, rows_cat: np.ndarray, suf_cat: np.ndarray,
-                    ua: np.ndarray, vb: np.ndarray, rho: np.ndarray,
+            # -- parent rows are spent operands: recycle their slots --------
+            for klass in drained:
+                store.free(klass.row_ids)
+
+    def _eval_pairs(self, store: DeviceRowStore, ua: np.ndarray,
+                    vb: np.ndarray, rho: np.ndarray,
                     stats: DeviceMiningStats,
-                    ) -> Tuple[List[np.ndarray], List[int], List[int]]:
-        n = ua.size
+                    ) -> Tuple[np.ndarray, List[int], List[int]]:
+        """Evaluate one pair chunk in a single fused device dispatch.
+
+        Returns (slots, supports, kept): store slots and supports of the
+        frequent children, plus their chunk-local pair indices."""
+        n = int(ua.size)
         stats.candidates += n
         nb, bw = self._n_blocks, self.block_words
         stats.word_ops_full += n * nb * bw
-
-        U = rows_cat[ua]
-        V = rows_cat[vb]
-        suf_u = suf_cat[ua]
-        suf_v = suf_cat[vb]
         mode = "and" if self.scheme == "eclat" else "andnot"
+        kernel_minsup = self._minsup if self.early_stop else 0
 
-        keep = np.arange(n)
-        if self.early_stop and nb > 1:
-            _, alive = ops.screen_pairs(
-                jnp.asarray(U[:, 0]), jnp.asarray(V[:, 0]),
-                jnp.asarray(suf_u[:, 1]), jnp.asarray(suf_v[:, 1]),
-                jnp.asarray(rho), jnp.int32(self._minsup), mode=mode)
-            stats.device_calls += 1
-            stats.word_ops += n * bw
-            alive = np.asarray(alive)
-            stats.screened_out += int((~alive).sum())
-            keep = np.nonzero(alive)[0]
-            if keep.size == 0:
-                return [], [], []
-            U, V, suf_u, suf_v, rho = (U[keep], V[keep], suf_u[keep],
-                                       suf_v[keep], rho[keep])
-        k = keep.size
-
-        if self.metrics:
-            kernel_minsup = self._minsup if self.early_stop else 0
-            Z, cnt, blocks, alive = ops.bitmap_intersect_es(
-                jnp.asarray(_bucket_pad(np.ascontiguousarray(U), k)),
-                jnp.asarray(_bucket_pad(np.ascontiguousarray(V), k)),
-                jnp.asarray(_bucket_pad(np.ascontiguousarray(suf_u), k)),
-                jnp.asarray(_bucket_pad(np.ascontiguousarray(suf_v), k)),
-                jnp.asarray(_bucket_pad(rho, k)),
-                jnp.int32(kernel_minsup), mode=mode, backend=self.backend)
-            stats.device_calls += 1
-            Z = np.asarray(Z[:k])
-            cnt = np.asarray(cnt[:k])
-            blocks = np.asarray(blocks[:k])
-            alive = np.asarray(alive[:k])
-            stats.word_ops += int(blocks.sum()) * bw
-            stats.kernel_aborts += int((blocks < nb).sum())
-        else:
-            Z, cnt = ops.bitmap_intersect_full(
-                jnp.asarray(_bucket_pad(np.ascontiguousarray(U), k)),
-                jnp.asarray(_bucket_pad(np.ascontiguousarray(V), k)),
+        slots = store.alloc(n)
+        cap = store.capacity
+        store.rows, store.suffix, cnt, blocks, alive = \
+            ops.screen_and_intersect(
+                store.rows, store.suffix,
+                _bucket_pad(ua, n), _bucket_pad(vb, n),
+                _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped
+                _bucket_pad(rho, n), jnp.int32(kernel_minsup),
                 mode=mode, backend=self.backend)
-            stats.device_calls += 1
-            Z = np.asarray(Z[:k])
-            cnt = np.asarray(cnt[:k])
-            alive = np.ones((k,), bool)
-            stats.word_ops += k * nb * bw
+        stats.device_calls += 1
+        cnt = np.asarray(cnt[:n])
+        blocks = np.asarray(blocks[:n])
+        alive = np.asarray(alive[:n])
+        stats.word_ops += int(blocks.sum()) * bw
+        if self.early_stop and nb > 1:
+            dead = ~alive
+            stats.screened_out += int((dead & (blocks == 1)).sum())
+            stats.kernel_aborts += int(
+                (dead & (blocks > 1) & (blocks < nb)).sum())
 
         support = cnt if self.scheme == "eclat" else rho - cnt
         # Dead pairs carry frozen (partial) counts; in "andnot" mode a frozen
         # count *overestimates* the support, so aliveness is load-bearing.
         freq = support >= self._minsup
-        if self.early_stop and self.metrics:
+        if self.early_stop:
             freq = np.logical_and(freq, alive)
 
-        rows_f: List[np.ndarray] = []
-        sup_f: List[int] = []
-        kept: List[int] = []
-        for bi in np.nonzero(freq)[0]:
-            rows_f.append(Z[bi])
-            sup_f.append(int(support[bi]))
-            kept.append(int(keep[bi]))   # local index within this chunk
-        return rows_f, sup_f, kept
+        kept_idx = np.nonzero(freq)[0]
+        store.free(slots[~freq])                  # dead children: recycle
+        return (slots[kept_idx],
+                [int(s) for s in support[kept_idx]],
+                [int(i) for i in kept_idx])
 
 
 def mine_bitmap(db: Sequence[Sequence[Hashable]], minsup: int,

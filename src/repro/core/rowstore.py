@@ -1,0 +1,88 @@
+"""Device-resident bitmap row store with a host-managed free list.
+
+The frontier engine's hot-path data structure (DESIGN.md §2, ISSUE 1):
+every TID bitmap / diffset row that the DFS can still touch lives in one
+preallocated device slab ``uint32[capacity, n_blocks, block_words]`` with
+a parallel suffix-popcount slab ``int32[capacity, n_blocks + 1]``.  The
+host never sees row *contents* — it only moves row *indices* around:
+
+  * ``alloc(k)`` hands out ``k`` free slots (growing the slab on demand);
+  * the fused kernel (``kernels.ops.screen_and_intersect``) gathers
+    operands by index and scatters children back by slot index;
+  * ``free(ids)`` returns slots of dead candidates / expanded classes.
+
+This is the same design the count-distribution miner sketches in
+``core/distributed.py`` (host free-list + device ``.at[slots].set``
+materialisation); it lives here so both engines can converge on one
+implementation (ROADMAP open item).
+
+Growth doubles capacity (device concat of a zero slab).  Capacities are
+rounded to the next power of two so the jit cache sees few distinct
+store shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.bitmap import suffix_popcounts
+
+
+def _round_capacity(n: int) -> int:
+    cap = 64
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+class DeviceRowStore:
+    """Slab of bitmap rows + suffix tables resident on device."""
+
+    def __init__(self, rows_np: np.ndarray, *, capacity: int = 0):
+        n, nb, bw = rows_np.shape
+        cap = _round_capacity(max(capacity, n, 1))
+        slab = np.zeros((cap, nb, bw), np.uint32)
+        slab[:n] = rows_np
+        self.rows = jnp.asarray(slab)                 # uint32 (cap, nb, bw)
+        self.suffix = suffix_popcounts(self.rows)     # int32  (cap, nb+1)
+        self.n_blocks = nb
+        self.block_words = bw
+        self._free: List[int] = list(range(cap - 1, n - 1, -1))
+        self.grows = 0
+        self.peak_live = n
+
+    @property
+    def capacity(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        return self.capacity - len(self._free)
+
+    def alloc(self, k: int) -> np.ndarray:
+        """Pop ``k`` free slots (int32), growing the slab if needed."""
+        if len(self._free) < k:
+            self._grow(self.n_live + k)
+        slots = np.asarray([self._free.pop() for _ in range(k)], np.int32)
+        self.peak_live = max(self.peak_live, self.n_live)
+        return slots
+
+    def free(self, ids: Iterable[int]) -> None:
+        self._free.extend(int(i) for i in ids)
+
+    def _grow(self, need: int) -> None:
+        old = self.capacity
+        new = _round_capacity(max(2 * old, need))
+        self.rows = jnp.concatenate(
+            [self.rows,
+             jnp.zeros((new - old, self.n_blocks, self.block_words),
+                       jnp.uint32)])
+        self.suffix = jnp.concatenate(
+            [self.suffix, jnp.zeros((new - old, self.n_blocks + 1),
+                                    jnp.int32)])
+        self._free.extend(range(new - 1, old - 1, -1))
+        self.grows += 1

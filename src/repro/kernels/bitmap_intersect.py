@@ -27,6 +27,17 @@ small; the kernel never needs an HBM-resident row.
 Semantics are defined by ``kernels/ref.py::bitmap_intersect_es_ref`` and
 must match it bit-for-bit (tests/test_kernels.py sweeps shapes, modes and
 minsup values, including minsup<=0 == ES disabled).
+
+Fused dispatch contract
+-----------------------
+The mining hot path no longer calls this kernel on host-materialised
+operand batches.  ``ops.screen_and_intersect`` wraps it in a single jit
+with a store-index gather in front and a child-row + suffix-table
+scatter behind, so that one ``pallas_call`` plus its surrounding
+gather/scatter lowers to ONE device dispatch per pair chunk and all row
+traffic stays in HBM/VMEM.  The block-0 iteration of the while_loop IS
+the old one-block screen (the bound after block 0 equals the screen
+bound), which is why no separate screen kernel exists anymore.
 """
 
 from __future__ import annotations

@@ -9,15 +9,21 @@
   * ``"auto"``     — pallas on TPU, jnp elsewhere (default).
 
 All wrappers keep shapes static-friendly: callers pad pair batches to
-bucketed sizes (core/bitmap.py::pad_pairs) so jit caches stay small.
+bucketed sizes (core/eclat.py::_bucket_pad) so jit caches stay small.
+``screen_and_intersect`` is the mining hot path: one dispatch per pair
+chunk against the device-resident row store, operand gather and child
+row/suffix scatter included.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.bitmap import suffix_popcounts as _suffix_popcounts
 
 from . import ref as _ref
 from .bitmap_intersect import bitmap_intersect_es as _pallas_bitmap
@@ -47,6 +53,54 @@ def bitmap_intersect_es(U, V, suffix_u, suffix_v, rho_parent, minsup,
                               mode=mode, interpret=not _on_tpu())
     return _ref.bitmap_intersect_es_ref(U, V, suffix_u, suffix_v,
                                         rho_parent, minsup, mode=mode)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "backend"),
+                   donate_argnums=(0, 1))
+def _screen_and_intersect_impl(rows, suffix, ua, vb, slots, rho_parent,
+                               minsup, *, mode: str, backend: str):
+    U = jnp.take(rows, ua, axis=0)
+    V = jnp.take(rows, vb, axis=0)
+    su = jnp.take(suffix, ua, axis=0)
+    sv = jnp.take(suffix, vb, axis=0)
+    if backend == "pallas":
+        Z, cnt, blocks, alive = _pallas_bitmap(
+            U, V, su, sv, rho_parent, minsup, mode=mode,
+            interpret=not _on_tpu())
+    else:
+        Z, cnt, blocks, alive = _ref.bitmap_intersect_es_ref(
+            U, V, su, sv, rho_parent, minsup, mode=mode)
+    child_suffix = _suffix_popcounts(Z)
+    # Out-of-range slots (pair padding / discarded children) are dropped.
+    rows = rows.at[slots].set(Z, mode="drop")
+    suffix = suffix.at[slots].set(child_suffix, mode="drop")
+    return rows, suffix, cnt, blocks, alive
+
+
+def screen_and_intersect(rows, suffix, ua, vb, slots, rho_parent, minsup,
+                         *, mode: str = "and", backend: str = "auto",
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                    jnp.ndarray, jnp.ndarray]:
+    """Fused screen + blocked ES intersection over a device row store.
+
+    One device dispatch per pair chunk: gathers operand rows/suffix tables
+    by index from the store, runs the blocked early-stopping intersection
+    (block-0 screen included — see ``ref.screen_and_intersect_ref``),
+    computes child suffix-popcount tables on device and scatters both into
+    the store at ``slots``.
+
+    ``rows``/``suffix`` buffers are DONATED: callers must replace their
+    handles with the returned arrays.  Returns
+    ``(rows, suffix, counts, blocks_done, alive)`` where
+    ``rows[slots[i]]`` holds child ``Z_i`` (bit-exact vs the ref) and
+    ``suffix[slots[i]]`` its suffix table.  Slots ``>= capacity`` are
+    dropped (used for padding).
+    """
+    b = _resolve(backend)
+    return _screen_and_intersect_impl(
+        rows, suffix, jnp.asarray(ua, jnp.int32), jnp.asarray(vb, jnp.int32),
+        jnp.asarray(slots, jnp.int32), jnp.asarray(rho_parent, jnp.int32),
+        jnp.asarray(minsup, jnp.int32), mode=mode, backend=b)
 
 
 def bitmap_intersect_full(U, V, *, mode: str = "and",

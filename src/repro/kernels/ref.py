@@ -80,6 +80,38 @@ def bitmap_intersect_es_ref(
     return Z, cnt, blocks, alive
 
 
+@functools.partial(jax.jit, static_argnames=("mode",))
+def screen_and_intersect_ref(
+    rows: jnp.ndarray,         # uint32 (capacity, n_blocks, bw) row store
+    suffix: jnp.ndarray,       # int32  (capacity, n_blocks + 1)
+    ua: jnp.ndarray,           # int32  (n_pairs,)  U operand row indices
+    vb: jnp.ndarray,           # int32  (n_pairs,)  V operand row indices
+    rho_parent: jnp.ndarray,   # int32  (n_pairs,)
+    minsup: jnp.ndarray,       # int32  scalar; <= 0 disables ES
+    *,
+    mode: str = "and",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused screen + blocked ES intersection over a device row store.
+
+    Operands are *gathered by row index* from ``rows``/``suffix`` instead of
+    being materialised by the host.  The one-block screen of the old
+    two-dispatch path is exactly the ``k = 0`` iteration of the blocked ES
+    scan — after block 0 the running bound equals the screen bound
+    ``|U0 op V0| (+ min(sufU[1], sufV[1]) | rho - c0)`` — so fusing them
+    changes the dispatch count, never the semantics: a screened-out pair is
+    simply one that dies with ``blocks_done == 1``.
+
+    Returns ``(Z, counts, blocks_done, alive)`` with the exact semantics of
+    :func:`bitmap_intersect_es_ref` applied to the gathered operands.
+    """
+    U = jnp.take(rows, ua, axis=0)
+    V = jnp.take(rows, vb, axis=0)
+    su = jnp.take(suffix, ua, axis=0)
+    sv = jnp.take(suffix, vb, axis=0)
+    return bitmap_intersect_es_ref(U, V, su, sv, rho_parent, minsup,
+                                   mode=mode)
+
+
 @jax.jit
 def bitmap_count_ref(U: jnp.ndarray, V: jnp.ndarray) -> jnp.ndarray:
     """Plain AND + popcount support counting (no ES, no Z materialised)."""

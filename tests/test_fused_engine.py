@@ -1,0 +1,128 @@
+"""Device-resident frontier engine: end-to-end and dispatch-count tests.
+
+The fused-path contract (ISSUE 1):
+  * `BitmapMiner.mine` issues exactly ONE device dispatch per pair chunk
+    (`ops.screen_and_intersect`) — no separate screen call, no full
+    intersect call, no host U/V row materialisation between levels;
+  * output `(itemset, support)` equals `oracle.mine` for eclat and
+    declat, ES on and off;
+  * the row store recycles slots (peak live rows stays bounded).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.eclat import BitmapMiner, mine_bitmap
+from repro.core.oracle import mine
+from repro.core.rowstore import DeviceRowStore
+from repro.kernels import ops
+
+
+def _random_db(seed, n_items=(3, 9), n_trans=(4, 30)):
+    rng = random.Random(seed)
+    ni = rng.randint(*n_items)
+    nt = rng.randint(*n_trans)
+    dens = rng.choice([0.2, 0.4, 0.6])
+    db = [[i for i in range(ni) if rng.random() < dens] for _ in range(nt)]
+    db = [t for t in db if t] or [[0]]
+    minsup = rng.randint(1, max(1, len(db) // 2))
+    return db, minsup
+
+
+@pytest.mark.parametrize("scheme", ["eclat", "declat"])
+@pytest.mark.parametrize("es", [False, True])
+def test_device_resident_engine_matches_oracle(scheme, es):
+    for seed in range(12):
+        db, minsup = _random_db(seed)
+        expected, _ = mine(db, minsup, scheme, early_stop=es)
+        out, _ = mine_bitmap(db, minsup, scheme=scheme, early_stop=es,
+                             block_words=4)
+        assert out == expected, (scheme, es, seed, minsup)
+
+
+@pytest.mark.parametrize("scheme", ["eclat", "declat"])
+@pytest.mark.parametrize("es", [False, True])
+def test_multiblock_engine_matches_oracle(scheme, es):
+    """Cross-block ES (freeze/alive past block 0) against the oracle:
+    block_words=1 gives 32 TIDs per block, so 150 transactions span 5
+    blocks and the blocked scan actually crosses block boundaries."""
+    for seed in range(4):
+        db, minsup = _random_db(100 + seed, n_items=(6, 9),
+                                n_trans=(140, 160))
+        minsup = max(minsup, 3)
+        expected, _ = mine(db, minsup, scheme, early_stop=es)
+        out, stats = mine_bitmap(db, minsup, scheme=scheme, early_stop=es,
+                                 block_words=1)
+        assert out == expected, (scheme, es, seed, minsup)
+        if es and seed == 0:
+            assert stats.word_ops <= stats.word_ops_full
+
+
+@pytest.mark.parametrize("scheme", ["eclat", "declat"])
+def test_one_device_dispatch_per_pair_chunk(monkeypatch, scheme):
+    """Every chunk is one fused dispatch; the legacy two-dispatch ops are
+    never called by the miner."""
+    calls = {"fused": 0, "legacy": 0}
+    real = ops.screen_and_intersect
+
+    def counting_fused(*a, **k):
+        calls["fused"] += 1
+        return real(*a, **k)
+
+    def forbidden(*a, **k):
+        calls["legacy"] += 1
+        raise AssertionError("legacy two-dispatch path used")
+
+    monkeypatch.setattr(ops, "screen_and_intersect", counting_fused)
+    monkeypatch.setattr(ops, "screen_pairs", forbidden)
+    monkeypatch.setattr(ops, "bitmap_intersect_es", forbidden)
+    monkeypatch.setattr(ops, "bitmap_intersect_full", forbidden)
+
+    db, minsup = _random_db(3, n_items=(8, 8), n_trans=(25, 30))
+    out, stats = mine_bitmap(db, minsup, scheme=scheme, early_stop=True,
+                             block_words=1, pair_chunk=4)
+    assert calls["legacy"] == 0
+    assert calls["fused"] == stats.device_calls
+    # small pair_chunk forces several chunks; each was one dispatch
+    assert stats.device_calls >= 2
+    expected, _ = mine(db, minsup, scheme, early_stop=True)
+    assert out == expected
+
+
+def test_row_store_alloc_free_grow():
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 2**32, (3, 2, 4), dtype=np.uint64).astype(
+        np.uint32)
+    store = DeviceRowStore(rows, capacity=4)
+    cap0 = store.capacity
+    assert store.n_live == 3
+    assert np.array_equal(np.asarray(store.rows[:3]), rows)
+    # suffix slab matches the host mirror
+    from repro.core.bitmap import suffix_popcounts_np
+    assert np.array_equal(np.asarray(store.suffix[:3]),
+                          suffix_popcounts_np(rows))
+    slots = store.alloc(2)
+    assert len(set(slots.tolist())) == 2
+    assert all(s >= 3 for s in slots)
+    store.free(slots)
+    assert store.n_live == 3
+    # exhaust -> grow (device slab reallocation, contents preserved)
+    big = store.alloc(cap0)
+    assert store.capacity > cap0
+    assert store.grows == 1
+    assert np.array_equal(np.asarray(store.rows[:3]), rows)
+    store.free(big)
+
+
+def test_store_slots_recycled_end_to_end():
+    """Expanded classes return their slots: peak live rows stays far below
+    total node count on a DFS with many levels."""
+    db, minsup = _random_db(5, n_items=(9, 9), n_trans=(28, 30))
+    miner = BitmapMiner(scheme="eclat", early_stop=True, block_words=1,
+                        pair_chunk=8)
+    out, stats = miner.mine(db, minsup)
+    assert stats.peak_rows <= stats.nodes + 8  # + one in-flight chunk
+    expected, _ = mine(db, minsup, "eclat", early_stop=True)
+    assert out == expected

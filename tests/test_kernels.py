@@ -9,7 +9,8 @@ from repro.core.bitmap import (pack_tidlists, suffix_popcounts_np,
                                popcount32_np, unpack_row)
 from repro.kernels import ops
 from repro.kernels.ref import (bitmap_intersect_es_ref, flash_attention_ref,
-                               embedding_bag_ref, screen_pairs_ref)
+                               embedding_bag_ref, screen_pairs_ref,
+                               screen_and_intersect_ref)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.segment_embed import embedding_bag
 
@@ -67,6 +68,45 @@ def test_bitmap_kernel_es_aborts_and_freezes():
     for i in range(16):
         if blocks[i] < 6:
             assert not Z[i, blocks[i]:].any()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("mode", ["and", "andnot"])
+@pytest.mark.parametrize("n_blocks,bw", [(1, 128), (3, 128), (5, 8)])
+def test_fused_screen_and_intersect_matches_ref(backend, mode, n_blocks, bw):
+    """ops.screen_and_intersect == gather + ES ref + scatter, bit-for-bit:
+    child rows and suffix tables land at `slots`, padding slots (>= cap)
+    are dropped, untouched store rows are untouched."""
+    rng = np.random.default_rng(11)
+    cap, n_pairs = 32, 9
+    store0 = _random_bitmaps(rng, cap, n_blocks, bw)
+    suffix0 = suffix_popcounts_np(store0)
+    ua = rng.integers(0, 12, n_pairs).astype(np.int32)
+    vb = rng.integers(0, 12, n_pairs).astype(np.int32)
+    slots = np.arange(12, 12 + n_pairs, dtype=np.int32)
+    slots[-1] = cap + 3          # OOB sentinel: must be dropped
+    rho = suffix0[ua, 0].astype(np.int32)
+    n_trans = n_blocks * bw * 32
+    for minsup in (0, 1, n_trans // 64, n_trans // 8):
+        Zr, cnt_r, blocks_r, alive_r = screen_and_intersect_ref(
+            store0, suffix0, ua, vb, rho, jnp.int32(minsup), mode=mode)
+        rows, suffix, cnt, blocks, alive = ops.screen_and_intersect(
+            jnp.asarray(store0), jnp.asarray(suffix0), ua, vb, slots, rho,
+            jnp.int32(minsup), mode=mode, backend=backend)
+        rows, suffix = np.asarray(rows), np.asarray(suffix)
+        key = (backend, mode, minsup)
+        assert np.array_equal(np.asarray(cnt), np.asarray(cnt_r)), key
+        assert np.array_equal(np.asarray(blocks), np.asarray(blocks_r)), key
+        assert np.array_equal(np.asarray(alive), np.asarray(alive_r)), key
+        Zr = np.asarray(Zr)
+        for i, s in enumerate(slots):
+            if s < cap:
+                assert np.array_equal(rows[s], Zr[i]), key
+                assert np.array_equal(suffix[s],
+                                      suffix_popcounts_np(Zr[i:i+1])[0]), key
+        untouched = [r for r in range(cap) if r not in set(slots.tolist())]
+        assert np.array_equal(rows[untouched], store0[untouched]), key
+        assert np.array_equal(suffix[untouched], suffix0[untouched]), key
 
 
 def test_screen_bound_is_sound():
