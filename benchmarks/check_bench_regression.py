@@ -1,0 +1,76 @@
+"""Diff a smoke-bench BENCH_*.json against the committed baseline.
+
+CI runs ``bench_paper.py --smoke`` on every commit and then this script;
+a ``word_ops`` or ``device_calls`` regression vs
+``benchmarks/baselines/BENCH_smoke.json`` fails the build (ROADMAP "CI
+trajectory" item).  Both metrics are deterministic functions of the
+engine (integer popcount math over a seeded synthetic dataset), so the
+default tolerance for ``word_ops`` is a small guard against counting
+tweaks and ``device_calls`` must not increase at all.
+
+A legitimate engine change that shifts the metrics should update the
+committed baseline in the same PR:
+
+    python benchmarks/bench_paper.py --smoke \
+        --out benchmarks/baselines/BENCH_smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RUNS = ("es", "full")
+
+
+def compare(current: dict, baseline: dict, word_ops_tol: float) -> list:
+    failures = []
+    for run in RUNS:
+        cur, base = current[run], baseline[run]
+        if cur["device_calls"] > base["device_calls"]:
+            failures.append(
+                f"{run}: device_calls regressed "
+                f"{base['device_calls']} -> {cur['device_calls']}")
+        limit = base["word_ops"] * (1.0 + word_ops_tol)
+        if cur["word_ops"] > limit:
+            failures.append(
+                f"{run}: word_ops regressed {base['word_ops']} -> "
+                f"{cur['word_ops']} (limit {limit:.0f})")
+    cur_saved = current["word_ops_saved_frac"]
+    base_saved = baseline["word_ops_saved_frac"]
+    if cur_saved < base_saved - word_ops_tol:
+        failures.append(
+            f"word_ops_saved_frac regressed {base_saved:.4f} -> "
+            f"{cur_saved:.4f}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="BENCH_*.json from this run")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--word-ops-tol", type=float, default=0.02,
+                    help="allowed fractional word_ops increase (default 2%%)")
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = compare(current, baseline, args.word_ops_tol)
+    for run in RUNS:
+        cur, base = current[run], baseline[run]
+        print(f"{run}: word_ops {base['word_ops']} -> {cur['word_ops']}, "
+              f"device_calls {base['device_calls']} -> "
+              f"{cur['device_calls']}", file=sys.stderr)
+    if failures:
+        print("BENCH REGRESSION:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        sys.exit(1)
+    print("bench diff ok (no word_ops/device_calls regression)",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,11 @@
 """End-to-end distributed mining: count distribution over a device mesh.
 
 Spawns an 8-device host mesh (the CPU stand-in for a pod), shards the
-TID bitmap blocks over the "data" axis and candidate pairs over "model",
-and mines a dataset with the two-level distributed Early-Stopping
-(screen psum + block kernel).  Results are verified against the
-single-host oracle.
+TID bitmap blocks across every mesh axis, and mines a dataset with the
+unified engine: one fused gather→screen→intersect→scatter dispatch per
+pair chunk against the shared block-sharded DeviceRowStore, with the
+two-level distributed Early-Stopping screen (psum of per-shard one-block
+bounds).  Results are verified against the single-host oracle.
 
     python examples/distributed_mining.py        # re-execs with 8 devices
 """
@@ -21,14 +22,14 @@ import time                                                   # noqa: E402
 
 import jax                                                    # noqa: E402
 
+from repro.compat import make_mesh                            # noqa: E402
 from repro.core.oracle import mine                            # noqa: E402
 from repro.core.distributed import DistributedMiner           # noqa: E402
 from repro.data import make_dataset                           # noqa: E402
 
 
 def main() -> None:
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {jax.device_count()} devices")
 
     db, minsups = make_dataset("kosarak-like")
@@ -47,8 +48,8 @@ def main() -> None:
     t_dist = time.time() - t0
     assert out == ref, "distributed result differs from oracle!"
     print(f"distributed: F={len(out):5d}  {t_dist:.2f}s  "
-          f"rounds={stats.rounds} screened={stats.screened_out}/"
-          f"{stats.candidates}")
+          f"dispatches={stats.device_calls} "
+          f"screened={stats.screened_out}/{stats.candidates}")
     print("count-distribution result == oracle: OK")
 
 

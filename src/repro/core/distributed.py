@@ -1,54 +1,63 @@
 """Distributed mining: count distribution over the TID axis.
 
 Scaling story (DESIGN.md §2.4): transactions (TID bitmap *blocks*) are
-sharded across the mesh's (``pod``, ``data``) axes; candidate pairs are
-sharded across ``model``.  Each device computes partial popcounts over its
-block shard; one ``psum`` of an ``int32[n_pairs]`` vector produces global
-supports.  The transaction data never moves — the only cross-device
-traffic is the per-candidate count vector, which is why the scheme scales
-to thousands of chips.
+sharded across the mesh axes; candidate pairs are replicated.  Each
+device computes partial popcounts over its block shard; one ``psum`` of
+``int32[n_pairs]`` vectors produces global bounds/supports.  The
+transaction data never moves — the only cross-device traffic is the
+per-candidate count vectors, which is why the scheme scales to
+thousands of chips (Count Distribution, Agrawal & Shafer '96, adapted
+to Eclat).
 
-Early stopping distributes as a *two-level* criterion:
+Early stopping distributes as the *two-level screen*: each shard
+computes its block-0 partial count plus its local suffix bound; the
+psum of per-shard bounds is a *tighter* global bound than the
+centralized one (sum of per-shard minima <= minimum of sums).  Pairs
+whose global bound misses minsup are provably infrequent and their
+classes are never expanded — the sharded instantiation of the paper's
+INTERSECT_ES.
 
-  * screen round (the distributed ES): each shard computes its block-0
-    partial count plus its local suffix bound; the psum of per-shard
-    bounds is a *tighter* global bound than the centralized one (sum of
-    per-shard minima <= minimum of sums).  Pairs whose global bound misses
-    minsup are dropped on the host before any full intersection runs.
-  * in-kernel block ES (TPU): within each shard the Pallas kernel walks
-    its local blocks with the shard-local criterion.  A shard-local abort
-    needs the global threshold to be distributed conservatively; we use
-    the screen round's per-pair slack for that (see ``_local_threshold``).
+Since ISSUE 2 the ``DistributedMiner`` is a thin subclass of
+``core.eclat.BitmapMiner``: both engines share one allocator
+(``core.rowstore.DeviceRowStore``, block-sharded here) and one fused
+gather→screen→intersect→scatter dispatch per pair chunk
+(``kernels.ops.make_screen_and_intersect_sharded``, bit-exact against
+``kernels.ref.screen_and_intersect_sharded_ref``).  The legacy three
+round programs (screen/count/materialize — 3 dispatches + 2
+collectives per round, with their own ad-hoc slab and duplicated
+free-list plumbing) are gone; a mining round is ONE dispatch with ONE
+psum, and the row store grows on demand instead of dead-ending in a
+"row store exhausted" error.
 
-Three jitted shard_map programs make up one mining round:
-  screen_round  -> bounds                      (cheap, 1 collective)
-  count_round   -> exact supports of survivors (1 collective)
-  materialize   -> child bitmaps of frequent pairs written into the
-                   device-resident row store (no collective)
-The host orchestrates DFS order, row allocation and free-listing.
+``make_mining_round`` / ``make_mining_round_v2`` remain: they are the
+standalone round programs used by the dry-run/roofline harness (cost
+analysis wants an isolated lowerable SPMD program, not a live miner).
 """
 
 from __future__ import annotations
 
-import functools
-import time
-from dataclasses import dataclass
-from typing import Dict, FrozenSet, Hashable, List, Optional, Sequence, Tuple
+from typing import Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.bitmap import BitmapDB, DEFAULT_BLOCK_WORDS, popcount32
+from repro.compat import shard_map
+from repro.core.bitmap import DEFAULT_BLOCK_WORDS, BitmapDB, popcount32
+from repro.core.eclat import (BitmapMiner, DeviceMiningStats, _bucket_pad,
+                              ItemsetSupports)  # noqa: F401 (re-export)
+from repro.core.rowstore import DeviceRowStore
+from repro.kernels import ops
 
-ItemsetSupports = Dict[FrozenSet[Hashable], int]
+# Back-compat alias: the unified engine reports the same stats object as
+# the single-device miner (``rounds`` became ``device_calls``).
+DistributedStats = DeviceMiningStats
 
 
 # ---------------------------------------------------------------------------
-# shard_map round programs
+# Standalone round programs (dry-run / roofline harness)
 # ---------------------------------------------------------------------------
 
 def _local_suffix(bitmaps: jnp.ndarray) -> jnp.ndarray:
@@ -57,92 +66,6 @@ def _local_suffix(bitmaps: jnp.ndarray) -> jnp.ndarray:
     rev = jnp.cumsum(per_block[:, ::-1], axis=1)[:, ::-1]
     zeros = jnp.zeros((bitmaps.shape[0], 1), jnp.int32)
     return jnp.concatenate([rev, zeros], axis=1)
-
-
-def make_round_fns(mesh: Mesh, *, tid_axes: Tuple[str, ...] = ("data",),
-                   pair_axis: str = "model", mode: str = "and"):
-    """Build the three jitted round programs for a given mesh.
-
-    Array layouts (global shapes):
-      store:  uint32 (n_rows, n_blocks, bw)   sharded P(None, tid_axes, None)
-      pairs:  int32  (n_pairs, 2)             sharded P(pair_axis, None)
-      rho:    int32  (n_pairs,)               sharded P(pair_axis)
-      counts: int32  (n_pairs,)               sharded P(pair_axis)
-      slots:  int32  (n_pairs,)  destination rows for materialize
-    """
-    if mode not in ("and", "andnot"):
-        raise ValueError(mode)
-    tid_spec = tid_axes if len(tid_axes) > 1 else tid_axes[0]
-    store_spec = P(None, tid_spec, None)
-    pair_spec = P(pair_axis, None)
-    vec_spec = P(pair_axis)
-
-    def _combine(u, v):
-        return u & (v if mode == "and" else ~v)
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(store_spec, pair_spec, vec_spec),
-        out_specs=vec_spec, check_rep=False)
-    def screen_round(store, pairs, rho):
-        u = store[pairs[:, 0]]            # (np_l, nb_l, bw)
-        v = store[pairs[:, 1]]
-        z0 = _combine(u[:, 0], v[:, 0])
-        c0 = popcount32(z0).sum(axis=-1)
-        if mode == "and":
-            su = _local_suffix(u)[:, 1]
-            sv = _local_suffix(v)[:, 1]
-            local_bound = c0 + jnp.minimum(su, sv)
-            return jax.lax.psum(local_bound, tid_axes)
-        # andnot: global bound = rho - psum(local diff count of block 0)
-        return rho - jax.lax.psum(c0, tid_axes)
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(store_spec, pair_spec),
-        out_specs=vec_spec, check_rep=False)
-    def count_round(store, pairs):
-        u = store[pairs[:, 0]]
-        v = store[pairs[:, 1]]
-        local = popcount32(_combine(u, v)).sum(axis=(-1, -2))
-        return jax.lax.psum(local, tid_axes)
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(store_spec, pair_spec, vec_spec, vec_spec),
-        out_specs=store_spec, check_rep=False)
-    def materialize(store, pairs, slots, keep):
-        # Write child rows Z into the store at `slots` (masked by `keep`).
-        # Runs entirely shard-local: every tid shard updates its own block
-        # columns of the destination rows.  Pairs are replicated here
-        # (pair_axis gathers happen on the host side by passing the same
-        # pairs to every model shard via P(None, ...) when n is small); to
-        # stay sharded we scatter with mode="drop" on masked slots.
-        u = store[pairs[:, 0]]
-        v = store[pairs[:, 1]]
-        z = _combine(u, v)
-        slots = jnp.where(keep > 0, slots, store.shape[0])  # OOB -> dropped
-        return store.at[slots].set(z, mode="drop")
-
-    screen_j = jax.jit(screen_round)
-    count_j = jax.jit(count_round)
-
-    # materialize writes to rows of the (replicated-over-pair_axis) store;
-    # pairs/slots must be replicated for it, so it gets its own specs:
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(store_spec, P(None, None), P(None), P(None)),
-        out_specs=store_spec, check_rep=False)
-    def materialize_rep(store, pairs, slots, keep):
-        u = store[pairs[:, 0]]
-        v = store[pairs[:, 1]]
-        z = _combine(u, v)
-        slots = jnp.where(keep > 0, slots, store.shape[0])
-        return store.at[slots].set(z, mode="drop")
-
-    mat_j = jax.jit(materialize_rep, donate_argnums=(0,))
-    del materialize
-    return screen_j, count_j, mat_j
 
 
 def make_mining_round(mesh: Mesh, *, pair_chunk: int = 2048):
@@ -164,10 +87,6 @@ def make_mining_round(mesh: Mesh, *, pair_chunk: int = 2048):
     all_axes = tuple(mesh.axis_names)
     tid_spec = all_axes if len(all_axes) > 1 else all_axes[0]
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(None, tid_spec, None), P(None, None), P(None)),
-        out_specs=(P(None), P(None)), check_rep=False)
     def mining_round(store, pairs, rho):
         del rho
         n = pairs.shape[0]
@@ -190,7 +109,10 @@ def make_mining_round(mesh: Mesh, *, pair_chunk: int = 2048):
         count = jax.lax.psum(counts.reshape(n), all_axes)
         return bound, count
 
-    return mining_round
+    return shard_map(
+        mining_round, mesh=mesh,
+        in_specs=(P(None, tid_spec, None), P(None, None), P(None)),
+        out_specs=(P(None), P(None)), check_rep=False)
 
 
 def make_mining_round_v2(mesh: Mesh, *, pair_chunk: int = 2048):
@@ -214,11 +136,6 @@ def make_mining_round_v2(mesh: Mesh, *, pair_chunk: int = 2048):
     all_axes = tuple(mesh.axis_names)
     tid_spec = all_axes if len(all_axes) > 1 else all_axes[0]
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(None, tid_spec, None), P(None, tid_spec), P(None, None),
-                  P(None)),
-        out_specs=(P(None), P(None)), check_rep=False)
     def mining_round(store, suffix1, pairs, rho):
         del rho
         n = pairs.shape[0]
@@ -242,169 +159,89 @@ def make_mining_round_v2(mesh: Mesh, *, pair_chunk: int = 2048):
         count = jax.lax.psum(counts.reshape(n), all_axes)
         return bound, count
 
-    return mining_round
+    return shard_map(
+        mining_round, mesh=mesh,
+        in_specs=(P(None, tid_spec, None), P(None, tid_spec), P(None, None),
+                  P(None)),
+        out_specs=(P(None), P(None)), check_rep=False)
 
 
 # ---------------------------------------------------------------------------
-# Host orchestrator
+# Unified distributed miner
 # ---------------------------------------------------------------------------
 
-@dataclass
-class DistributedStats:
-    candidates: int = 0
-    nodes: int = 0
-    screened_out: int = 0
-    rounds: int = 0
-    runtime_s: float = 0.0
-
-    def as_dict(self):
-        return dict(candidates=self.candidates, nodes=self.nodes,
-                    screened_out=self.screened_out, rounds=self.rounds,
-                    runtime_s=round(self.runtime_s, 6))
-
-
-class DistributedMiner:
+class DistributedMiner(BitmapMiner):
     """Count-distribution Eclat over a device mesh.
 
-    The row store is a device-resident sharded ``uint32`` array with a
-    host-side free-list allocator; DFS recursion, slot bookkeeping and the
-    screen/count/materialize round sequencing run on the host.
+    The host/DFS split, frontier batching, free-list bookkeeping and
+    stats all come from ``BitmapMiner``; this class only swaps in
+
+      * a block-sharded ``DeviceRowStore`` (slab + per-shard suffix
+        tables under ``NamedSharding``s, growing on demand), and
+      * the fused shard_map dispatch — one device call and one psum per
+        pair chunk, no separate screen/count/materialize programs.
+
+    ``tid_axes`` defaults to every mesh axis (maximum block
+    parallelism).  ``capacity`` is an initial-size hint only: the slab
+    grows instead of raising.  ``pair_axis`` is accepted for
+    backward compatibility and ignored — pairs are replicated; the
+    psum'd bound/count vectors are the only cross-device traffic.
     """
 
-    def __init__(self, mesh: Mesh, *, tid_axes: Tuple[str, ...] = ("data",),
-                 pair_axis: str = "model", early_stop: bool = True,
+    def __init__(self, mesh: Mesh, *,
+                 tid_axes: Tuple[str, ...] = None,
+                 pair_axis: str = None,
+                 early_stop: bool = True,
                  capacity: int = 4096, pair_chunk: int = 4096,
                  block_words: int = DEFAULT_BLOCK_WORDS):
+        super().__init__(scheme="eclat", early_stop=early_stop,
+                         block_words=block_words, pair_chunk=pair_chunk,
+                         backend="jnp")
+        del pair_axis
         self.mesh = mesh
-        self.tid_axes = tid_axes
-        self.pair_axis = pair_axis
-        self.early_stop = early_stop
+        self.tid_axes = tuple(tid_axes) if tid_axes else tuple(mesh.axis_names)
         self.capacity = capacity
-        self.pair_chunk = pair_chunk
-        self.block_words = block_words
-        self.screen_j, self.count_j, self.mat_j = make_round_fns(
-            mesh, tid_axes=tid_axes, pair_axis=pair_axis, mode="and")
-        tid_spec = tid_axes if len(tid_axes) > 1 else tid_axes[0]
-        self._store_sharding = NamedSharding(mesh, P(None, tid_spec, None))
-        self._pair_sharding = NamedSharding(mesh, P(pair_axis, None))
-        self._vec_sharding = NamedSharding(mesh, P(pair_axis))
-        self._rep_pair = NamedSharding(mesh, P(None, None))
-        self._rep_vec = NamedSharding(mesh, P(None))
+        self._fused = ops.make_screen_and_intersect_sharded(
+            mesh, tid_axes=self.tid_axes, mode="and")
 
-    # -- helpers ------------------------------------------------------------
+    def _make_store(self, bdb: BitmapDB) -> DeviceRowStore:
+        return DeviceRowStore(
+            bdb.bitmaps,
+            capacity=max(self.capacity,
+                         bdb.n_items + min(self.pair_chunk, 4096)),
+            mesh=self.mesh, tid_axes=self.tid_axes)
 
-    def _pad_pairs(self, n: int) -> int:
-        """Pair batches padded to a multiple of the pair-axis size."""
-        m = self.mesh.shape[self.pair_axis] * 64
-        return max(m, ((n + m - 1) // m) * m)
-
-    def mine(self, db: Sequence[Sequence[Hashable]], minsup: int,
-             ) -> Tuple[ItemsetSupports, DistributedStats]:
-        if minsup < 1:
-            raise ValueError("minsup must be an absolute count >= 1")
-        stats = DistributedStats()
-        t0 = time.perf_counter()
-
-        bdb = BitmapDB.from_db(db, minsup, self.block_words)
-        n_items, nb, bw = bdb.bitmaps.shape
-        # Pad the block axis so it divides the tid mesh axes.
-        tid_size = 1
-        for ax in self.tid_axes:
-            tid_size *= self.mesh.shape[ax]
-        nb_pad = ((nb + tid_size - 1) // tid_size) * tid_size
-        cap = max(self.capacity, n_items + self.pair_chunk)
-        store_np = np.zeros((cap, nb_pad, bw), np.uint32)
-        store_np[:n_items, :nb] = bdb.bitmaps
-        store = jax.device_put(store_np, self._store_sharding)
-        del store_np
-
-        free: List[int] = list(range(cap - 1, n_items - 1, -1))
-        out: ItemsetSupports = {}
-        supports: Dict[int, int] = {}
-        for r, item in enumerate(bdb.items):
-            out[frozenset((item,))] = int(bdb.supports[r])
-            supports[r] = int(bdb.supports[r])
-            stats.nodes += 1
-
-        minsup_i = minsup
-
-        def run_class(members: List[Tuple[Tuple[Hashable, ...], int]]):
-            # members: list of (itemset, store_row); already frequent.
-            for a in range(len(members)):
-                sibs = members[a + 1:]
-                if not sibs:
-                    continue
-                children: List[Tuple[Tuple[Hashable, ...], int]] = []
-                for lo in range(0, len(sibs), self.pair_chunk):
-                    chunk = sibs[lo:lo + self.pair_chunk]
-                    children.extend(self._round(
-                        store_ref, members[a], chunk, supports, out,
-                        free, stats, minsup_i))
-                if children:
-                    run_class(children)
-                    for _, row in children:
-                        free.append(row)
-                        supports.pop(row, None)
-
-        # Small indirection so _round can swap the donated store handle.
-        store_ref = [store]
-        run_class([((it,), r) for r, it in enumerate(bdb.items)])
-        stats.runtime_s = time.perf_counter() - t0
-        return out, stats
-
-    def _round(self, store_ref, px, chunk, supports, out, free, stats,
-               minsup) -> List[Tuple[Tuple[Hashable, ...], int]]:
-        store = store_ref[0]
-        n = len(chunk)
-        stats.candidates += n
-        stats.rounds += 1
-        a_row = px[1]
-        pairs_np = np.zeros((self._pad_pairs(n), 2), np.int32)
-        pairs_np[:n, 0] = a_row
-        pairs_np[:n, 1] = [row for _, row in chunk]
-        rho_np = np.zeros((pairs_np.shape[0],), np.int32)
-        rho_np[:n] = supports[a_row]
-
-        pairs = jax.device_put(pairs_np, self._pair_sharding)
-        rho = jax.device_put(rho_np, self._vec_sharding)
-
+    def _dispatch(self, store: DeviceRowStore, ua: np.ndarray,
+                  vb: np.ndarray, slots: np.ndarray, rho: np.ndarray,
+                  mode: str, stats: DeviceMiningStats,
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        if mode != "and":
+            # The fused program was compiled with mode="and" in __init__;
+            # silently intersecting instead of differencing would corrupt
+            # supports, so fail loudly if a dEclat path ever lands here.
+            raise NotImplementedError(
+                "DistributedMiner is eclat-only (mode='and')")
+        n = int(ua.size)
+        cap = store.capacity
+        store.rows, store.suffix, bound, count = self._fused(
+            store.rows, store.suffix,
+            _bucket_pad(ua, n), _bucket_pad(vb, n),
+            _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped
+            _bucket_pad(rho, n))
+        stats.device_calls += 1
+        bound = np.asarray(bound[:n])
+        count = np.asarray(count[:n])
+        # Every shard walks all of its local blocks: the single fused
+        # dispatch computes the exact count unconditionally, so here the
+        # screen bound costs ~nothing extra (block-0 popcounts are reused
+        # from the count) but also saves no in-dispatch work — word_ops
+        # == word_ops_full and ``screened_out`` is attribution, not a
+        # savings counter.  Distributing the screen's per-pair slack as a
+        # shard-local block-ES threshold is the ROADMAP follow-up.
+        stats.word_ops += n * self._n_blocks * self.block_words
         if self.early_stop:
-            bound = np.asarray(self.screen_j(store, pairs, rho))[:n]
-            alive = bound >= minsup
+            alive = bound >= self._minsup
             stats.screened_out += int((~alive).sum())
-            if not alive.any():
-                return []
         else:
-            alive = np.ones((n,), bool)
-
-        counts = np.asarray(self.count_j(store, pairs))[:n]
-        freq_mask = np.logical_and(alive, counts >= minsup)
-        freq_idx = np.nonzero(freq_mask)[0]
-        if freq_idx.size == 0:
-            return []
-
-        if len(free) < freq_idx.size:
-            raise RuntimeError(
-                f"row store exhausted ({self.capacity} rows): raise capacity")
-        slots = np.array([free.pop() for _ in freq_idx], np.int32)
-        keep_np = np.zeros((pairs_np.shape[0],), np.int32)
-        keep_np[freq_idx] = 1
-        slots_np = np.zeros((pairs_np.shape[0],), np.int32)
-        slots_np[freq_idx] = slots
-
-        store = self.mat_j(
-            store,
-            jax.device_put(pairs_np, self._rep_pair),
-            jax.device_put(slots_np, self._rep_vec),
-            jax.device_put(keep_np, self._rep_vec))
-        store_ref[0] = store
-
-        children = []
-        for s, bi in zip(slots, freq_idx):
-            child_set = px[0] + (chunk[int(bi)][0][-1],)
-            sup = int(counts[bi])
-            out[frozenset(child_set)] = sup
-            supports[int(s)] = sup
-            stats.nodes += 1
-            children.append((child_set, int(s)))
-        return children
+            alive = np.ones(n, bool)
+        return count, alive

@@ -151,21 +151,26 @@ class BitmapMiner:
             out[frozenset((item,))] = int(bdb.supports[r])
             stats.nodes += 1
 
-        store = DeviceRowStore(
-            bdb.bitmaps,
-            capacity=bdb.n_items + min(self.pair_chunk, 4096))
+        store = self._make_store(bdb)
         root = _Class(
             itemsets=[(it,) for it in bdb.items],
             row_ids=np.arange(bdb.n_items, dtype=np.int32),
             supports=bdb.supports.astype(np.int32),
             is_tidlist=True)
         self._minsup = minsup
-        self._n_blocks = bdb.n_blocks
+        self._n_blocks = store.n_blocks   # padded under a sharded store
         self._traverse(store, root, out, stats)
         stats.store_grows = store.grows
         stats.peak_rows = store.peak_live
         stats.runtime_s = time.perf_counter() - t0
         return out, stats
+
+    def _make_store(self, bdb: BitmapDB) -> DeviceRowStore:
+        """Allocate the device slab.  Subclasses (the distributed miner)
+        override this to place it under a sharded layout."""
+        return DeviceRowStore(
+            bdb.bitmaps,
+            capacity=bdb.n_items + min(self.pair_chunk, 4096))
 
     # -- frontier-batched expansion -----------------------------------------
     #
@@ -260,30 +265,11 @@ class BitmapMiner:
         frequent children, plus their chunk-local pair indices."""
         n = int(ua.size)
         stats.candidates += n
-        nb, bw = self._n_blocks, self.block_words
-        stats.word_ops_full += n * nb * bw
+        stats.word_ops_full += n * self._n_blocks * self.block_words
         mode = "and" if self.scheme == "eclat" else "andnot"
-        kernel_minsup = self._minsup if self.early_stop else 0
 
         slots = store.alloc(n)
-        cap = store.capacity
-        store.rows, store.suffix, cnt, blocks, alive = \
-            ops.screen_and_intersect(
-                store.rows, store.suffix,
-                _bucket_pad(ua, n), _bucket_pad(vb, n),
-                _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped
-                _bucket_pad(rho, n), jnp.int32(kernel_minsup),
-                mode=mode, backend=self.backend)
-        stats.device_calls += 1
-        cnt = np.asarray(cnt[:n])
-        blocks = np.asarray(blocks[:n])
-        alive = np.asarray(alive[:n])
-        stats.word_ops += int(blocks.sum()) * bw
-        if self.early_stop and nb > 1:
-            dead = ~alive
-            stats.screened_out += int((dead & (blocks == 1)).sum())
-            stats.kernel_aborts += int(
-                (dead & (blocks > 1) & (blocks < nb)).sum())
+        cnt, alive = self._dispatch(store, ua, vb, slots, rho, mode, stats)
 
         support = cnt if self.scheme == "eclat" else rho - cnt
         # Dead pairs carry frozen (partial) counts; in "andnot" mode a frozen
@@ -297,6 +283,42 @@ class BitmapMiner:
         return (slots[kept_idx],
                 [int(s) for s in support[kept_idx]],
                 [int(i) for i in kept_idx])
+
+    def _dispatch(self, store: DeviceRowStore, ua: np.ndarray,
+                  vb: np.ndarray, slots: np.ndarray, rho: np.ndarray,
+                  mode: str, stats: DeviceMiningStats,
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """One fused device dispatch; updates work/attribution stats.
+
+        Returns ``(cnt, alive)`` trimmed to the chunk length, where
+        ``cnt`` is the raw kernel count (support for "and", diffset size
+        for "andnot") and ``alive`` marks pairs that survived ES.  The
+        distributed miner overrides this with the shard_map dispatch."""
+        n = int(ua.size)
+        kernel_minsup = self._minsup if self.early_stop else 0
+        cap = store.capacity
+        store.rows, store.suffix, cnt, blocks, alive = \
+            ops.screen_and_intersect(
+                store.rows, store.suffix,
+                _bucket_pad(ua, n), _bucket_pad(vb, n),
+                _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped
+                _bucket_pad(rho, n), jnp.int32(kernel_minsup),
+                mode=mode, backend=self.backend)
+        stats.device_calls += 1
+        cnt = np.asarray(cnt[:n])
+        blocks = np.asarray(blocks[:n])
+        alive = np.asarray(alive[:n])
+        stats.word_ops += int(blocks.sum()) * self.block_words
+        if self.early_stop:
+            # Attribution: a dead pair that did exactly one block was
+            # killed by the fused one-block screen — including on
+            # single-block datasets (nb == 1) and pairs that died on the
+            # final block (blocks == nb), which the pre-ISSUE-2 code
+            # dropped from both buckets.
+            dead = ~alive
+            stats.screened_out += int((dead & (blocks == 1)).sum())
+            stats.kernel_aborts += int((dead & (blocks > 1)).sum())
+        return cnt, alive
 
 
 def mine_bitmap(db: Sequence[Sequence[Hashable]], minsup: int,

@@ -3,33 +3,44 @@
 The frontier engine's hot-path data structure (DESIGN.md §2, ISSUE 1):
 every TID bitmap / diffset row that the DFS can still touch lives in one
 preallocated device slab ``uint32[capacity, n_blocks, block_words]`` with
-a parallel suffix-popcount slab ``int32[capacity, n_blocks + 1]``.  The
-host never sees row *contents* — it only moves row *indices* around:
+a parallel suffix-popcount slab.  The host never sees row *contents* — it
+only moves row *indices* around:
 
   * ``alloc(k)`` hands out ``k`` free slots (growing the slab on demand);
-  * the fused kernel (``kernels.ops.screen_and_intersect``) gathers
-    operands by index and scatters children back by slot index;
+  * the fused kernel (``kernels.ops.screen_and_intersect`` or its
+    shard_map variant) gathers operands by index and scatters children
+    back by slot index;
   * ``free(ids)`` returns slots of dead candidates / expanded classes.
 
-This is the same design the count-distribution miner sketches in
-``core/distributed.py`` (host free-list + device ``.at[slots].set``
-materialisation); it lives here so both engines can converge on one
-implementation (ROADMAP open item).
+Both mining engines allocate from this class (ISSUE 2 unification):
 
-Growth doubles capacity (device concat of a zero slab).  Capacities are
-rounded to the next power of two so the jit cache sees few distinct
-store shapes.
+* **Single-device** (``mesh=None``): ``suffix`` is the global suffix
+  table ``int32[capacity, n_blocks + 1]`` (``core.bitmap``'s layout).
+* **Sharded** (``mesh`` given): the block axis of ``rows`` is sharded
+  across ``tid_axes`` under a ``NamedSharding`` (``n_blocks`` is padded
+  up to a multiple of the shard count), and ``suffix`` holds the
+  *per-shard* suffix tables concatenated along axis 1 —
+  ``int32[capacity, n_shards * (local_blocks + 1)]``, column-sharded so
+  each shard owns exactly its own ``(local_blocks + 1)``-wide local
+  suffix table.  With one shard the two layouts coincide.
+
+Growth doubles capacity (device concat of a zero slab, re-placed under
+the store's sharding).  Capacities are rounded to the next power of two
+so the jit cache sees few distinct store shapes.  Exhaustion can no
+longer happen: ``alloc`` grows instead of raising.
 """
 
 from __future__ import annotations
 
-from typing import Iterable, List
+from typing import Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.bitmap import suffix_popcounts
+from repro.core.bitmap import popcount32_np, suffix_popcounts
 
 
 def _round_capacity(n: int) -> int:
@@ -39,18 +50,65 @@ def _round_capacity(n: int) -> int:
     return cap
 
 
-class DeviceRowStore:
-    """Slab of bitmap rows + suffix tables resident on device."""
+def _local_suffix_tables(rows_np: np.ndarray, n_shards: int) -> np.ndarray:
+    """Per-shard suffix tables, concatenated: (n, n_shards*(nb_local+1)).
 
-    def __init__(self, rows_np: np.ndarray, *, capacity: int = 0):
+    Shard ``s`` owns columns ``[s*(nbl+1), (s+1)*(nbl+1))`` — its local
+    analogue of :func:`repro.core.bitmap.suffix_popcounts_np`."""
+    n, nb, _ = rows_np.shape
+    nbl = nb // n_shards
+    per_block = popcount32_np(rows_np).sum(axis=-1).astype(np.int32)
+    pb = per_block.reshape(n, n_shards, nbl)
+    suf = np.zeros((n, n_shards, nbl + 1), np.int32)
+    suf[:, :, :-1] = pb[:, :, ::-1].cumsum(axis=-1)[:, :, ::-1]
+    return suf.reshape(n, n_shards * (nbl + 1))
+
+
+class DeviceRowStore:
+    """Slab of bitmap rows + suffix tables resident on device.
+
+    ``mesh``/``tid_axes``: when given, the block axis is sharded across
+    the product of those mesh axes and both slabs live under
+    ``NamedSharding``s (see module docstring for the suffix layout).
+    """
+
+    def __init__(self, rows_np: np.ndarray, *, capacity: int = 0,
+                 mesh: Optional[Mesh] = None,
+                 tid_axes: Optional[Tuple[str, ...]] = None):
         n, nb, bw = rows_np.shape
         cap = _round_capacity(max(capacity, n, 1))
+
+        self.mesh = mesh
+        self._rows_sharding = None
+        self._suffix_sharding = None
+        if mesh is None:
+            self.n_shards = 1
+        else:
+            tid_axes = tuple(tid_axes) if tid_axes else tuple(mesh.axis_names)
+            self.tid_axes = tid_axes
+            self.n_shards = 1
+            for ax in tid_axes:
+                self.n_shards *= mesh.shape[ax]
+            # Pad the block axis so it divides the tid shard count.
+            nb = -(-nb // self.n_shards) * self.n_shards
+            tid_spec: Union[str, Tuple[str, ...]] = (
+                tid_axes if len(tid_axes) > 1 else tid_axes[0])
+            self._rows_sharding = NamedSharding(mesh, P(None, tid_spec, None))
+            self._suffix_sharding = NamedSharding(mesh, P(None, tid_spec))
+
         slab = np.zeros((cap, nb, bw), np.uint32)
-        slab[:n] = rows_np
-        self.rows = jnp.asarray(slab)                 # uint32 (cap, nb, bw)
-        self.suffix = suffix_popcounts(self.rows)     # int32  (cap, nb+1)
+        slab[:n, :rows_np.shape[1]] = rows_np
         self.n_blocks = nb
+        self.local_blocks = nb // self.n_shards
         self.block_words = bw
+        if mesh is None:
+            self.rows = jnp.asarray(slab)             # uint32 (cap, nb, bw)
+            self.suffix = suffix_popcounts(self.rows)  # int32 (cap, nb+1)
+        else:
+            self.rows = jax.device_put(slab, self._rows_sharding)
+            self.suffix = jax.device_put(
+                _local_suffix_tables(slab, self.n_shards),
+                self._suffix_sharding)
         self._free: List[int] = list(range(cap - 1, n - 1, -1))
         self.grows = 0
         self.peak_live = n
@@ -77,12 +135,19 @@ class DeviceRowStore:
     def _grow(self, need: int) -> None:
         old = self.capacity
         new = _round_capacity(max(2 * old, need))
-        self.rows = jnp.concatenate(
+        rows = jnp.concatenate(
             [self.rows,
              jnp.zeros((new - old, self.n_blocks, self.block_words),
                        jnp.uint32)])
-        self.suffix = jnp.concatenate(
-            [self.suffix, jnp.zeros((new - old, self.n_blocks + 1),
-                                    jnp.int32)])
+        suffix = jnp.concatenate(
+            [self.suffix,
+             jnp.zeros((new - old, self.suffix.shape[1]), jnp.int32)])
+        if self._rows_sharding is not None:
+            # Re-place explicitly: concat of a sharded slab with fresh
+            # zeros must stay block-sharded for the shard_map dispatch.
+            rows = jax.device_put(rows, self._rows_sharding)
+            suffix = jax.device_put(suffix, self._suffix_sharding)
+        self.rows = rows
+        self.suffix = suffix
         self._free.extend(range(new - 1, old - 1, -1))
         self.grows += 1

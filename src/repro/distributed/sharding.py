@@ -20,6 +20,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import get_abstract_mesh
+
 AxisName = Optional[Union[str, Tuple[str, ...]]]
 AxisRules = Dict[str, AxisName]
 
@@ -92,7 +94,7 @@ def use_rules(rules: AxisRules):
 def _mesh_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
     if mesh is not None:
         return tuple(mesh.axis_names)
-    env = jax.sharding.get_abstract_mesh()
+    env = get_abstract_mesh()   # None on JAX < 0.5 (repro.compat)
     if env is not None and env.axis_names:
         return tuple(env.axis_names)
     return ()

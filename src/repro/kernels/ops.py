@@ -22,7 +22,10 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
+from repro.core.bitmap import popcount32 as _popcount32
 from repro.core.bitmap import suffix_popcounts as _suffix_popcounts
 
 from . import ref as _ref
@@ -101,6 +104,74 @@ def screen_and_intersect(rows, suffix, ua, vb, slots, rho_parent, minsup,
         rows, suffix, jnp.asarray(ua, jnp.int32), jnp.asarray(vb, jnp.int32),
         jnp.asarray(slots, jnp.int32), jnp.asarray(rho_parent, jnp.int32),
         jnp.asarray(minsup, jnp.int32), mode=mode, backend=b)
+
+
+@functools.lru_cache(maxsize=None)
+def make_screen_and_intersect_sharded(mesh: Mesh,
+                                      tid_axes: Tuple[str, ...] = (),
+                                      mode: str = "and"):
+    """Build the fused sharded dispatch for ``mesh`` (ISSUE 2 tentpole).
+
+    Returns a jitted shard_map program
+    ``fused(rows, suffix, ua, vb, slots, rho_parent) ->
+    (rows, suffix, bound, count)`` that is bit-exact against
+    ``ref.screen_and_intersect_sharded_ref`` with ``n_shards`` = the
+    product of ``tid_axes`` sizes.  Layouts (``DeviceRowStore`` sharded
+    mode): ``rows uint32 (cap, nb, bw)`` block-sharded over ``tid_axes``;
+    ``suffix int32 (cap, n_shards*(nb_local+1))`` column-sharded so each
+    shard owns its local suffix table; pair index/rho vectors replicated.
+
+    One dispatch per pair chunk replaces the legacy three round programs
+    (screen / count / materialize — 3 dispatches + 2 collectives): it
+    gathers operands from the block-sharded slab, computes the per-shard
+    block-0 screen bound + local suffix mass and the per-shard partial
+    popcount, psums the two ``int32[n_pairs]`` vectors, and scatters
+    child rows + suffix columns shard-locally (one collective total).
+    ``rows``/``suffix`` are DONATED: callers must replace their handles.
+    """
+    if mode not in ("and", "andnot"):
+        raise ValueError(f"bad mode {mode!r}")
+    tid_axes = tuple(tid_axes) if tid_axes else tuple(mesh.axis_names)
+    tid_spec = tid_axes if len(tid_axes) > 1 else tid_axes[0]
+    rows_spec = P(None, tid_spec, None)
+    suffix_spec = P(None, tid_spec)
+    vec = P(None)
+
+    def fused(rows, suffix, ua, vb, slots, rho_parent):
+        # Local shapes: rows (cap, nb_local, bw), suffix (cap, nb_local+1).
+        U = jnp.take(rows, ua, axis=0)
+        V = jnp.take(rows, vb, axis=0)
+        Z = U & (V if mode == "and" else ~V)
+        zpc = _popcount32(Z).sum(axis=-1)            # (n, nb_local)
+        count = jax.lax.psum(zpc.sum(axis=-1), tid_axes)
+        c0 = zpc[:, 0]
+        if mode == "and":
+            su1 = jnp.take(suffix, ua, axis=0)[:, 1]
+            sv1 = jnp.take(suffix, vb, axis=0)[:, 1]
+            bound = jax.lax.psum(c0 + jnp.minimum(su1, sv1), tid_axes)
+        else:
+            bound = rho_parent.astype(jnp.int32) - jax.lax.psum(c0, tid_axes)
+        child_suffix = jnp.concatenate(
+            [jnp.cumsum(zpc[:, ::-1], axis=-1)[:, ::-1],
+             jnp.zeros((zpc.shape[0], 1), jnp.int32)], axis=-1)
+        rows = rows.at[slots].set(Z, mode="drop")
+        suffix = suffix.at[slots].set(child_suffix, mode="drop")
+        return rows, suffix, bound, count
+
+    mapped = _shard_map(
+        fused, mesh=mesh,
+        in_specs=(rows_spec, suffix_spec, vec, vec, vec, vec),
+        out_specs=(rows_spec, suffix_spec, vec, vec),
+        check_rep=False)
+    jitted = jax.jit(mapped, donate_argnums=(0, 1))
+
+    def dispatch(rows, suffix, ua, vb, slots, rho_parent):
+        return jitted(rows, suffix,
+                      jnp.asarray(ua, jnp.int32), jnp.asarray(vb, jnp.int32),
+                      jnp.asarray(slots, jnp.int32),
+                      jnp.asarray(rho_parent, jnp.int32))
+
+    return dispatch
 
 
 def bitmap_intersect_full(U, V, *, mode: str = "and",

@@ -112,6 +112,75 @@ def screen_and_intersect_ref(
                                    mode=mode)
 
 
+@functools.partial(jax.jit, static_argnames=("n_shards", "mode"))
+def screen_and_intersect_sharded_ref(
+    rows: jnp.ndarray,         # uint32 (capacity, n_blocks, bw) row store
+    suffix: jnp.ndarray,       # int32  (capacity, n_shards*(nb_local+1))
+    ua: jnp.ndarray,           # int32  (n_pairs,)  U operand row indices
+    vb: jnp.ndarray,           # int32  (n_pairs,)  V operand row indices
+    slots: jnp.ndarray,        # int32  (n_pairs,)  child dest rows (OOB drop)
+    rho_parent: jnp.ndarray,   # int32  (n_pairs,)  parent support ("andnot")
+    *,
+    n_shards: int,
+    mode: str = "and",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for the sharded fused dispatch (ISSUE 2 unification).
+
+    Pins the exact semantics ``ops.make_screen_and_intersect_sharded``
+    must reproduce bit-for-bit when the block axis of ``rows`` is sharded
+    into ``n_shards`` contiguous shards of ``nb_local = n_blocks //
+    n_shards`` blocks each, and ``suffix`` holds the per-shard local
+    suffix tables concatenated along axis 1 (shard ``s`` owns columns
+    ``[s*(nbl+1), (s+1)*(nbl+1))`` — ``DeviceRowStore``'s sharded
+    layout).  One dispatch per pair chunk computes, per pair:
+
+    * ``count`` — the exact global support contribution
+      (``psum`` of per-shard popcounts of ``Z = U op V``);
+    * ``bound`` — the *two-level distributed screen*: each shard refines
+      with its own block 0, so the global bound is the psum of per-shard
+      one-block bounds — mode "and":
+      ``sum_s (|U0_s op V0_s| + min(sufU_s[1], sufV_s[1]))``
+      (sum of per-shard minima <= minimum of sums: tighter than the
+      centralized screen), mode "andnot": ``rho_parent - sum_s |U0_s &
+      ~V0_s|``;
+
+    and scatters the child rows plus their per-shard suffix tables into
+    the store at ``slots`` (slots ``>= capacity`` are dropped — pair
+    padding / discarded children).  A pair whose ``bound`` misses minsup
+    is provably infrequent; the host never materialises its class.
+
+    Returns ``(rows, suffix, bound, count)``.
+    """
+    if mode not in ("and", "andnot"):
+        raise ValueError(f"bad mode {mode!r}")
+    n_pairs = ua.shape[0]
+    cap, nb, bw = rows.shape
+    nbl = nb // n_shards
+
+    U = jnp.take(rows, ua, axis=0).reshape(n_pairs, n_shards, nbl, bw)
+    V = jnp.take(rows, vb, axis=0).reshape(n_pairs, n_shards, nbl, bw)
+    Z = U & (V if mode == "and" else ~V)
+    zpc = popcount32(Z).sum(axis=-1)                # (n, S, nbl)
+    count = zpc.sum(axis=(1, 2))
+    c0 = zpc[:, :, 0]                               # (n, S) per-shard block 0
+    if mode == "and":
+        su1 = jnp.take(suffix, ua, axis=0).reshape(
+            n_pairs, n_shards, nbl + 1)[:, :, 1]
+        sv1 = jnp.take(suffix, vb, axis=0).reshape(
+            n_pairs, n_shards, nbl + 1)[:, :, 1]
+        bound = (c0 + jnp.minimum(su1, sv1)).sum(axis=1)
+    else:
+        bound = rho_parent.astype(jnp.int32) - c0.sum(axis=1)
+
+    child_suffix = jnp.concatenate(
+        [jnp.cumsum(zpc[:, :, ::-1], axis=-1)[:, :, ::-1],
+         jnp.zeros((n_pairs, n_shards, 1), jnp.int32)],
+        axis=-1).reshape(n_pairs, n_shards * (nbl + 1))
+    rows = rows.at[slots].set(Z.reshape(n_pairs, nb, bw), mode="drop")
+    suffix = suffix.at[slots].set(child_suffix, mode="drop")
+    return rows, suffix, bound, count
+
+
 @jax.jit
 def bitmap_count_ref(U: jnp.ndarray, V: jnp.ndarray) -> jnp.ndarray:
     """Plain AND + popcount support counting (no ES, no Z materialised)."""

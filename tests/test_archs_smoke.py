@@ -159,11 +159,11 @@ def test_fim_smoke_mining_round_single_device():
     """The paper's workload lowers and runs on a 1x1 mesh."""
     import jax
     import numpy as np
+    from repro.compat import make_mesh
     from repro.core.distributed import make_mining_round
     from repro.core.bitmap import pack_tidlists, popcount32_np
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     round_fn = jax.jit(make_mining_round(mesh, pair_chunk=8))
     rng = np.random.default_rng(0)
     store = rng.integers(0, 2 ** 32, (16, 2, 8), dtype=np.uint64

@@ -2,9 +2,12 @@
 
 The multi-device pieces run in a subprocess with
 ``--xla_force_host_platform_device_count=8`` so the main pytest process
-keeps the real single-device view.
+keeps the real single-device view.  Mesh construction goes through
+``repro.compat`` (JAX-version shim — the supported floor 0.4.30 has
+neither ``jax.sharding.AxisType`` nor ``get_abstract_mesh``).
 """
 
+import random
 import subprocess
 import sys
 import textwrap
@@ -13,8 +16,9 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import make_mesh
 from repro.distributed.sharding import (DEFAULT_RULES, logical_spec,
                                         use_rules, divisibility_report)
 from repro.distributed.compression import (quantize_int8, dequantize_int8,
@@ -22,8 +26,7 @@ from repro.distributed.compression import (quantize_int8, dequantize_int8,
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_logical_spec_resolution():
@@ -53,9 +56,28 @@ def test_use_rules_is_scoped():
 
 
 def test_divisibility_report():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _mesh11()
     assert divisibility_report((16, 16), P("data", "model"), mesh) == []
+
+
+def test_mesh_compat_shim(monkeypatch):
+    """The version shim must keep working on newer JAX where AxisType /
+    get_abstract_mesh exist: strip them and assert the fallbacks engage
+    (on JAX < 0.5 this exercises the one production path)."""
+    from repro import compat
+
+    monkeypatch.delattr(jax.sharding, "AxisType", raising=False)
+    monkeypatch.delattr(jax.sharding, "get_abstract_mesh", raising=False)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    assert tuple(mesh.axis_names) == ("data", "model")
+    assert compat.get_abstract_mesh() is None
+    # rules resolution (distributed/sharding.py) survives the absence
+    assert logical_spec(("batch",), mesh) == P("data")
+    assert logical_spec(("batch",), None) == P(None)
+    # oldest floor: no jax.make_mesh at all -> mesh_utils fallback
+    monkeypatch.delattr(jax, "make_mesh", raising=False)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    assert tuple(mesh.axis_names) == ("data", "model")
 
 
 def test_arch_rules_divisible_on_production_mesh():
@@ -101,6 +123,146 @@ def test_error_feedback_is_unbiased_over_time():
                                np.asarray(g["w"]), atol=0.02)
 
 
+# ---------------------------------------------------------------------------
+# Unified distributed miner (ISSUE 2): shared DeviceRowStore + one fused
+# shard_map dispatch per pair chunk
+# ---------------------------------------------------------------------------
+
+
+def _random_db(seed, n_items=(4, 9), n_trans=(10, 60)):
+    rng = random.Random(seed)
+    ni = rng.randint(*n_items)
+    nt = rng.randint(*n_trans)
+    db = [[i for i in range(ni) if rng.random() < 0.5] for _ in range(nt)]
+    db = [t for t in db if t] or [[0]]
+    minsup = rng.randint(2, max(2, len(db) // 3))
+    return db, minsup
+
+
+def test_fused_sharded_dispatch_matches_ref():
+    """ops.make_screen_and_intersect_sharded == kernels.ref oracle,
+    bit-exact (1 shard here; the 8-shard version runs in the subprocess
+    test below)."""
+    from repro.core.rowstore import DeviceRowStore
+    from repro.kernels import ops, ref
+
+    mesh = _mesh11()
+    r = np.random.default_rng(3)
+    rows_np = r.integers(0, 2 ** 32, (16, 4, 4), dtype=np.uint64
+                         ).astype(np.uint32)
+    store = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
+    n = 12
+    ua = r.integers(0, 16, n).astype(np.int32)
+    vb = r.integers(0, 16, n).astype(np.int32)
+    slots = np.arange(16, 16 + n, dtype=np.int32)
+    rho = r.integers(0, 100, n).astype(np.int32)
+
+    rows0 = np.asarray(store.rows)
+    suf0 = np.asarray(store.suffix)
+    er, esuf, eb, ec = ref.screen_and_intersect_sharded_ref(
+        rows0, suf0, ua, vb, slots, rho, n_shards=store.n_shards)
+    fused = ops.make_screen_and_intersect_sharded(
+        mesh, tid_axes=("data", "model"))
+    gr, gs, gb, gc = fused(store.rows, store.suffix, ua, vb, slots, rho)
+    assert np.array_equal(np.asarray(gb), np.asarray(eb))
+    assert np.array_equal(np.asarray(gc), np.asarray(ec))
+    assert np.array_equal(np.asarray(gr), np.asarray(er))
+    assert np.array_equal(np.asarray(gs), np.asarray(esuf))
+    # screen soundness: the bound dominates the exact count
+    assert (np.asarray(gb) >= np.asarray(gc)).all()
+
+
+def test_sharded_row_store_grow_preserves_sharding_and_contents():
+    from repro.core.rowstore import DeviceRowStore, _local_suffix_tables
+
+    mesh = _mesh11()
+    tid_spec = ("data", "model")
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 2 ** 32, (3, 2, 4), dtype=np.uint64
+                        ).astype(np.uint32)
+    store = DeviceRowStore(rows, capacity=4, mesh=mesh)
+    # block axis padded to a multiple of the shard count
+    assert store.n_blocks % store.n_shards == 0
+    cap0 = store.capacity
+    expected_rows = NamedSharding(mesh, P(None, tid_spec, None))
+    expected_suffix = NamedSharding(mesh, P(None, tid_spec))
+    assert store.rows.sharding == expected_rows
+    assert store.suffix.sharding == expected_suffix
+    big = store.alloc(cap0)
+    assert store.capacity > cap0 and store.grows == 1
+    # sharding survives growth; contents + suffix layout preserved
+    assert store.rows.sharding == expected_rows
+    assert store.suffix.sharding == expected_suffix
+    padded = np.zeros((3, store.n_blocks, 4), np.uint32)
+    padded[:, :2] = rows
+    assert np.array_equal(np.asarray(store.rows[:3]), padded)
+    assert np.array_equal(np.asarray(store.suffix[:3]),
+                          _local_suffix_tables(padded, store.n_shards))
+    store.free(big)
+
+
+def test_unified_miner_one_fused_dispatch_per_chunk(monkeypatch):
+    """Mirror of test_fused_engine.py's dispatch guard: every pair chunk
+    is exactly ONE fused shard_map dispatch; no separate screen / count /
+    materialize program exists or is called."""
+    import repro.core.distributed as D
+    from repro.core.oracle import mine
+    from repro.kernels import ops
+
+    for name in ("make_round_fns", "screen_round", "count_round",
+                 "materialize_rep"):
+        assert not hasattr(D, name), f"legacy round program {name} back"
+
+    calls = {"fused": 0}
+    real_maker = ops.make_screen_and_intersect_sharded
+
+    def counting_maker(mesh, **kw):
+        fn = real_maker(mesh, **kw)
+
+        def wrapper(*a, **k):
+            calls["fused"] += 1
+            return fn(*a, **k)
+
+        return wrapper
+
+    def forbidden(*a, **k):
+        raise AssertionError("single-device / legacy dispatch used")
+
+    monkeypatch.setattr(ops, "make_screen_and_intersect_sharded",
+                        counting_maker)
+    monkeypatch.setattr(ops, "screen_and_intersect", forbidden)
+    monkeypatch.setattr(ops, "screen_pairs", forbidden)
+    monkeypatch.setattr(ops, "bitmap_intersect_es", forbidden)
+    monkeypatch.setattr(ops, "bitmap_intersect_full", forbidden)
+
+    db, minsup = _random_db(3, n_items=(8, 8), n_trans=(25, 30))
+    m = D.DistributedMiner(_mesh11(), early_stop=True, block_words=1,
+                           pair_chunk=4)
+    out, stats = m.mine(db, minsup)
+    assert calls["fused"] == stats.device_calls
+    assert stats.device_calls >= 2     # small pair_chunk forces chunking
+    expected, _ = mine(db, minsup, "eclat", early_stop=True)
+    assert out == expected
+
+
+@pytest.mark.parametrize("es", [False, True])
+def test_unified_miner_matches_oracle_single_device(es):
+    from repro.core.distributed import DistributedMiner
+    from repro.core.oracle import mine
+
+    mesh = _mesh11()
+    for seed in range(6):
+        db, minsup = _random_db(seed)
+        expected, _ = mine(db, minsup, "eclat", early_stop=es)
+        out, stats = DistributedMiner(mesh, early_stop=es, capacity=512,
+                                      block_words=2).mine(db, minsup)
+        assert out == expected, (seed, es)
+        if es:
+            # the distributed screen is attributed, even single-block
+            assert stats.screened_out >= 0
+            assert stats.candidates >= stats.screened_out
+
+
 MULTI_DEVICE_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -109,12 +271,19 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
     import random
     import numpy as np
     import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import make_mesh
     from repro.core.oracle import mine_bruteforce
     from repro.core.distributed import DistributedMiner, make_mining_round
+    from repro.core.rowstore import DeviceRowStore, _local_suffix_tables
     from repro.core.bitmap import popcount32_np
+    from repro.kernels import ops, ref
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    assert jax.device_count() == 8
+    mesh = make_mesh((4, 2), ("data", "model"))
+
+    # unified miner == oracle on 8 devices, ES on/off, ONE fused dispatch
+    # per pair chunk (wrapped counter vs stats.device_calls)
     rng = random.Random(7)
     for trial in range(4):
         n_items = rng.randint(4, 9)
@@ -127,12 +296,50 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
         for es in (False, True):
             m = DistributedMiner(mesh, early_stop=es, capacity=512,
                                  block_words=2)
+            calls = [0]
+            inner = m._fused
+            def counted(*a, _i=inner, _c=calls, **k):
+                _c[0] += 1
+                return _i(*a, **k)
+            m._fused = counted
             out, st = m.mine(db, minsup)
             assert out == bf, (trial, es)
+            assert calls[0] == st.device_calls >= 1, (trial, es)
+
+    # fused dispatch is bit-exact against the 8-shard ref oracle
+    r = np.random.default_rng(0)
+    rows_np = r.integers(0, 2**32, (16, 8, 4), dtype=np.uint64
+                         ).astype(np.uint32)
+    store = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
+    assert store.n_shards == 8
+    ua = r.integers(0, 16, 12).astype(np.int32)
+    vb = r.integers(0, 16, 12).astype(np.int32)
+    slots = np.arange(16, 28, dtype=np.int32)
+    rho = r.integers(0, 100, 12).astype(np.int32)
+    rows0, suf0 = np.asarray(store.rows), np.asarray(store.suffix)
+    er, esuf, eb, ec = ref.screen_and_intersect_sharded_ref(
+        rows0, suf0, ua, vb, slots, rho, n_shards=8)
+    fused = ops.make_screen_and_intersect_sharded(
+        mesh, tid_axes=("data", "model"))
+    gr, gs, gb, gc = fused(store.rows, store.suffix, ua, vb, slots, rho)
+    assert np.array_equal(np.asarray(gb), np.asarray(eb))
+    assert np.array_equal(np.asarray(gc), np.asarray(ec))
+    assert np.array_equal(np.asarray(gr), np.asarray(er))
+    assert np.array_equal(np.asarray(gs), np.asarray(esuf))
+
+    # sharded slab growth preserves the NamedSharding + contents
+    store2 = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
+    cap0 = store2.capacity
+    big = store2.alloc(cap0)
+    assert store2.grows == 1
+    assert store2.rows.sharding == NamedSharding(
+        mesh, P(None, ("data", "model"), None))
+    assert np.array_equal(np.asarray(store2.rows[:16]), rows_np)
+    assert np.array_equal(np.asarray(store2.suffix[:16]),
+                          _local_suffix_tables(rows_np, 8))
 
     # mining_round on the multi-axis mesh matches a local computation
     round_fn = jax.jit(make_mining_round(mesh, pair_chunk=8))
-    r = np.random.default_rng(0)
     store = r.integers(0, 2**32, (16, 8, 8), dtype=np.uint64
                        ).astype(np.uint32)
     pairs = np.stack([r.integers(0, 16, 16), r.integers(0, 16, 16)],
@@ -179,10 +386,10 @@ CROSSPOD_SCRIPT = textwrap.dedent("""
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
     import numpy as np
+    from repro.compat import make_mesh
     from repro.distributed.compression import compressed_crosspod_allreduce
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     g = {"w": jnp.linspace(-2, 2, 256).reshape(16, 16),
          "b": jnp.ones((16,)) * 0.5}
     out = compressed_crosspod_allreduce(g, mesh)

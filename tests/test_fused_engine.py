@@ -91,6 +91,43 @@ def test_one_device_dispatch_per_pair_chunk(monkeypatch, scheme):
     assert out == expected
 
 
+def _dead_candidates(out, stats):
+    """With eclat + ES, a pair is ES-dead iff it is infrequent, so the
+    dead count is candidates - frequent children."""
+    singles = sum(1 for s in out if len(s) == 1)
+    return stats.candidates - (stats.nodes - singles)
+
+
+def test_es_death_attribution_single_block():
+    """nb == 1: every ES death IS a screen death (the pre-ISSUE-2 code
+    skipped attribution entirely when n_blocks == 1, leaving
+    screened_out == 0)."""
+    for seed in range(8):
+        db, minsup = _random_db(seed, n_items=(6, 9), n_trans=(15, 30))
+        # default block_words=128 -> one block for these tiny DBs
+        out, stats = mine_bitmap(db, minsup, "eclat", early_stop=True)
+        dead = _dead_candidates(out, stats)
+        assert stats.screened_out == dead, seed
+        assert stats.kernel_aborts == 0, seed
+        if dead:
+            return
+    raise AssertionError("no seed produced a dead candidate")
+
+
+def test_es_death_attribution_accounts_every_dead_pair():
+    """Multi-block: screen deaths + kernel aborts partition the dead set —
+    including pairs that die on the FINAL block (blocks == nb), which the
+    pre-ISSUE-2 code dropped from both buckets."""
+    for seed in range(4):
+        db, minsup = _random_db(200 + seed, n_items=(6, 9),
+                                n_trans=(140, 160))
+        minsup = max(minsup, 3)
+        out, stats = mine_bitmap(db, minsup, "eclat", early_stop=True,
+                                 block_words=1)
+        dead = _dead_candidates(out, stats)
+        assert stats.screened_out + stats.kernel_aborts == dead, seed
+
+
 def test_row_store_alloc_free_grow():
     rng = np.random.default_rng(0)
     rows = rng.integers(0, 2**32, (3, 2, 4), dtype=np.uint64).astype(

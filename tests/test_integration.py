@@ -56,8 +56,8 @@ DRYRUN_SMALL = textwrap.dedent("""
     import sys
     sys.path.insert(0, "src")
     import jax
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((4, 4), ("data", "model"))
     import repro.launch.dryrun as DR
     rec = DR.run_cell("qwen1.5-0.5b", "decode_32k", mesh, "test4x4",
                       "/tmp/dryrun_test_ci")

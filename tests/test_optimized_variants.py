@@ -6,10 +6,11 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.compat import make_mesh
+
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_mining_round_v2_matches_v1():

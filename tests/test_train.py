@@ -149,11 +149,11 @@ def test_elastic_restore_resharding(tmp_path):
     """Checkpoints are mesh-agnostic: restore re-places leaves onto the
     current device set (pod count can change between runs)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import make_mesh
     d = str(tmp_path / "ckpt")
     state = _state(3)
     save_checkpoint(d, 1, state)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     sh = jax.tree.map(
         lambda _: NamedSharding(mesh, P()), state)
     restored, _, _ = restore_checkpoint(d, state, shardings=sh)
