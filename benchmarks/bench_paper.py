@@ -100,47 +100,91 @@ def figures(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
-def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
-    """CI benchmark smoke: tiny sparse synthetic DB through the
-    device-resident engine, ES vs full.
+def _smoke_datasets() -> Dict[str, tuple]:
+    """The CI smoke matrix (ROADMAP "widen the smoke dataset set"):
 
-    Hard-asserts the paper's headline effect (``word_ops_saved_frac > 0``
-    for the ES engine vs the non-ES full run, identical result sets) and
-    writes the stats JSON so every CI run leaves a bench artifact.
+    * ``powerlaw`` — sparse retail-like, high candidate/node ratio: the
+      regime where bitmap-engine ES word-op savings are large;
+    * ``dense``    — correlated tabular (chess-like), ratio ~ 1;
+    * ``longpat``  — highly correlated tabular with long frequent
+      patterns (maxlen ~ n_cols): the dense/long-pattern regime where
+      N-list schemes (PrePost+) are the interesting engine.
     """
-    from repro.data.transactions import gen_powerlaw_baskets
+    from repro.data.transactions import (gen_dense_tabular,
+                                         gen_powerlaw_baskets)
 
-    db = gen_powerlaw_baskets(n_trans=800, n_items=400, avg_trans_len=8,
-                              seed=0)
-    minsup = max(2, int(round(0.004 * len(db))))
-    t0 = time.perf_counter()
-    out_es, st_es = mine_bitmap(db, minsup, "eclat", early_stop=True,
-                                block_words=8)
-    t_es = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out_no, st_no = mine_bitmap(db, minsup, "eclat", early_stop=False,
-                                block_words=8)
-    t_no = time.perf_counter() - t0
-
-    assert out_es == out_no, "ES changed the result set"
-    assert st_es.word_ops_saved_frac > 0, (
-        f"ES saved no word ops: {st_es.as_dict()}")
-    assert st_es.word_ops < st_no.word_ops
-
-    report = {
-        "dataset": {"family": "powerlaw", "n_trans": len(db),
-                    "n_items": 400, "minsup": minsup},
-        "frequent_itemsets": len(out_es),
-        "es": {**st_es.as_dict(), "wall_s": round(t_es, 3)},
-        "full": {**st_no.as_dict(), "wall_s": round(t_no, 3)},
-        "word_ops_saved_frac": st_es.word_ops_saved_frac,
+    return {
+        "powerlaw": (gen_powerlaw_baskets(n_trans=300, n_items=200,
+                                          avg_trans_len=6, seed=0), 3),
+        "dense": (gen_dense_tabular(n_trans=500, n_cols=9,
+                                    vals_per_col=4, seed=0), 175),
+        "longpat": (gen_dense_tabular(n_trans=400, n_cols=10,
+                                      vals_per_col=3, correlation=0.95,
+                                      n_classes=2, seed=1), 120),
     }
+
+
+def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
+    """CI benchmark smoke: the three-regime dataset matrix through both
+    device engines (bitmap Eclat and PrePost+), ES vs full.
+
+    Hard-asserts the paper's headline effect where it is guaranteed
+    (identical result sets everywhere; ``word_ops_saved_frac > 0`` and
+    PrePost+ comparison savings on the sparse powerlaw replica; ES never
+    increases PrePost+ comparisons anywhere) and writes the stats JSON
+    so every CI run leaves a bench artifact
+    (benchmarks/check_bench_regression.py diffs it vs the committed
+    baseline).
+    """
+    from repro.core.prepost import mine_prepost_device
+
+    report: Dict = {"datasets": {}}
+    for name, (db, minsup) in _smoke_datasets().items():
+        t0 = time.perf_counter()
+        out_es, st_es = mine_bitmap(db, minsup, "eclat", early_stop=True,
+                                    block_words=8)
+        t_es = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out_no, st_no = mine_bitmap(db, minsup, "eclat", early_stop=False,
+                                    block_words=8)
+        t_no = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out_pes, st_pes = mine_prepost_device(db, minsup, early_stop=True)
+        t_pes = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out_pno, st_pno = mine_prepost_device(db, minsup, early_stop=False)
+        t_pno = time.perf_counter() - t0
+
+        assert out_es == out_no == out_pes == out_pno, (
+            f"{name}: engines disagree")
+        assert st_pes.comparisons <= st_pno.comparisons, (
+            f"{name}: ES increased PrePost+ comparisons")
+        cmp_saved = 1.0 - st_pes.comparisons / max(st_pno.comparisons, 1)
+        report["datasets"][name] = {
+            "dataset": {"n_trans": len(db), "minsup": minsup},
+            "frequent_itemsets": len(out_es),
+            "es": {**st_es.as_dict(), "wall_s": round(t_es, 3)},
+            "full": {**st_no.as_dict(), "wall_s": round(t_no, 3)},
+            "word_ops_saved_frac": st_es.word_ops_saved_frac,
+            "prepost": {
+                "es": {**st_pes.as_dict(), "wall_s": round(t_pes, 3)},
+                "full": {**st_pno.as_dict(), "wall_s": round(t_pno, 3)},
+                "comparisons_saved_frac": round(cmp_saved, 4),
+            },
+        }
+        print(f"smoke {name}: F={len(out_es)}, "
+              f"word_ops_saved_frac={st_es.word_ops_saved_frac:.3f}, "
+              f"prepost_cmp_saved={cmp_saved:.3f}, "
+              f"device_calls={st_es.device_calls}+"
+              f"{st_pes.device_calls}", file=sys.stderr)
+
+    pl = report["datasets"]["powerlaw"]
+    assert pl["word_ops_saved_frac"] > 0, "ES saved no word ops (powerlaw)"
+    assert pl["prepost"]["comparisons_saved_frac"] > 0, (
+        "ES saved no PrePost+ comparisons (powerlaw)")
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
-    print(f"smoke ok: word_ops_saved_frac="
-          f"{st_es.word_ops_saved_frac:.3f}, "
-          f"device_calls={st_es.device_calls}, F={len(out_es)} "
-          f"-> {out_path}", file=sys.stderr)
+    print(f"smoke ok -> {out_path}", file=sys.stderr)
     return report
 
 

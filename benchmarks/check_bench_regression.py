@@ -1,15 +1,18 @@
 """Diff a smoke-bench BENCH_*.json against the committed baseline.
 
 CI runs ``bench_paper.py --smoke`` on every commit and then this script;
-a ``word_ops`` or ``device_calls`` regression vs
-``benchmarks/baselines/BENCH_smoke.json`` fails the build (ROADMAP "CI
-trajectory" item).  Both metrics are deterministic functions of the
-engine (integer popcount math over a seeded synthetic dataset), so the
-default tolerance for ``word_ops`` is a small guard against counting
-tweaks and ``device_calls`` must not increase at all.
+a regression vs ``benchmarks/baselines/BENCH_smoke.json`` fails the
+build (ROADMAP "CI trajectory" item).  Per smoke dataset:
 
-A legitimate engine change that shifts the metrics should update the
-committed baseline in the same PR:
+* bitmap engine: ``word_ops`` (small tolerance), ``device_calls`` and
+  ``word_ops_saved_frac`` must not regress;
+* PrePost+ engine: ``comparisons`` must not increase (they are pinned
+  to the oracle's exact counters — invariant I4 — so any increase is an
+  engine bug, not noise) and ``device_calls`` must not increase.
+
+All metrics are deterministic functions of the engines (integer math
+over seeded synthetic datasets).  A legitimate engine change that
+shifts them should update the committed baseline in the same PR:
 
     python benchmarks/bench_paper.py --smoke \
         --out benchmarks/baselines/BENCH_smoke.json
@@ -24,25 +27,47 @@ import sys
 RUNS = ("es", "full")
 
 
-def compare(current: dict, baseline: dict, word_ops_tol: float) -> list:
+def compare_dataset(name: str, current: dict, baseline: dict,
+                    word_ops_tol: float) -> list:
     failures = []
     for run in RUNS:
         cur, base = current[run], baseline[run]
         if cur["device_calls"] > base["device_calls"]:
             failures.append(
-                f"{run}: device_calls regressed "
+                f"{name}/{run}: device_calls regressed "
                 f"{base['device_calls']} -> {cur['device_calls']}")
         limit = base["word_ops"] * (1.0 + word_ops_tol)
         if cur["word_ops"] > limit:
             failures.append(
-                f"{run}: word_ops regressed {base['word_ops']} -> "
+                f"{name}/{run}: word_ops regressed {base['word_ops']} -> "
                 f"{cur['word_ops']} (limit {limit:.0f})")
+        pcur, pbase = current["prepost"][run], baseline["prepost"][run]
+        if pcur["comparisons"] > pbase["comparisons"]:
+            failures.append(
+                f"{name}/{run}: prepost comparisons regressed "
+                f"{pbase['comparisons']} -> {pcur['comparisons']}")
+        if pcur["device_calls"] > pbase["device_calls"]:
+            failures.append(
+                f"{name}/{run}: prepost device_calls regressed "
+                f"{pbase['device_calls']} -> {pcur['device_calls']}")
     cur_saved = current["word_ops_saved_frac"]
     base_saved = baseline["word_ops_saved_frac"]
     if cur_saved < base_saved - word_ops_tol:
         failures.append(
-            f"word_ops_saved_frac regressed {base_saved:.4f} -> "
+            f"{name}: word_ops_saved_frac regressed {base_saved:.4f} -> "
             f"{cur_saved:.4f}")
+    return failures
+
+
+def compare(current: dict, baseline: dict, word_ops_tol: float) -> list:
+    failures = []
+    for name, base_ds in baseline["datasets"].items():
+        cur_ds = current["datasets"].get(name)
+        if cur_ds is None:
+            failures.append(f"{name}: dataset missing from current run")
+            continue
+        failures.extend(
+            compare_dataset(name, cur_ds, base_ds, word_ops_tol))
     return failures
 
 
@@ -59,17 +84,23 @@ def main() -> None:
         baseline = json.load(f)
 
     failures = compare(current, baseline, args.word_ops_tol)
-    for run in RUNS:
-        cur, base = current[run], baseline[run]
-        print(f"{run}: word_ops {base['word_ops']} -> {cur['word_ops']}, "
-              f"device_calls {base['device_calls']} -> "
-              f"{cur['device_calls']}", file=sys.stderr)
+    for name, base_ds in baseline["datasets"].items():
+        cur_ds = current["datasets"].get(name)
+        if cur_ds is None:
+            continue
+        for run in RUNS:
+            print(f"{name}/{run}: word_ops "
+                  f"{base_ds[run]['word_ops']} -> "
+                  f"{cur_ds[run]['word_ops']}, prepost comparisons "
+                  f"{base_ds['prepost'][run]['comparisons']} -> "
+                  f"{cur_ds['prepost'][run]['comparisons']}",
+                  file=sys.stderr)
     if failures:
         print("BENCH REGRESSION:\n  " + "\n  ".join(failures),
               file=sys.stderr)
         sys.exit(1)
-    print("bench diff ok (no word_ops/device_calls regression)",
-          file=sys.stderr)
+    print("bench diff ok (no word_ops/device_calls/comparisons "
+          "regression)", file=sys.stderr)
 
 
 if __name__ == "__main__":

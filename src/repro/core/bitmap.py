@@ -43,6 +43,40 @@ DEFAULT_BLOCK_WORDS = 128  # 4096 TIDs per block; one lane-aligned tile.
 # kernels.ref; lives here to keep the import graph acyclic).
 NL_SENTINEL = np.iinfo(np.int32).max
 
+# Bucketed N-list lengths: gather widths and pool extents are padded to
+# these so the jit cache sees few distinct shapes.  Lengths past the
+# largest tuned bucket fall back to next-power-of-two sizing (huge
+# N-lists are rare but must not be a hard error).
+NL_LEN_BUCKETS = (8, 32, 128, 512, 2048, 8192, 32768)
+
+
+def nl_pad_len(n: int) -> int:
+    """Smallest N-list bucket >= ``n`` (power-of-two fallback past the
+    largest tuned bucket)."""
+    for b in NL_LEN_BUCKETS:
+        if n <= b:
+            return b
+    b = NL_LEN_BUCKETS[-1]
+    while b < n:
+        b *= 2
+    return b
+
+
+def bucket_pad(arr: np.ndarray, n: int, bucket_sizes: Sequence[int],
+               fill=0) -> np.ndarray:
+    """Pad ``arr`` (first ``n`` entries valid) to the smallest bucket >= n.
+
+    Shared by every engine's pair-chunk dispatch so jit caches stay
+    small; callers drop results past ``n``."""
+    for b in bucket_sizes:
+        if n <= b:
+            if n == b:
+                return arr
+            pad_shape = (b - n,) + arr.shape[1:]
+            return np.concatenate([arr, np.full(pad_shape, fill, arr.dtype)])
+    raise ValueError(f"batch of {n} exceeds largest bucket "
+                     f"{max(bucket_sizes)}")
+
 
 def popcount32(x: jnp.ndarray) -> jnp.ndarray:
     """SWAR population count for uint32 arrays (returns int32)."""

@@ -43,7 +43,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.bitmap import BitmapDB, DEFAULT_BLOCK_WORDS
+from repro.core.bitmap import BitmapDB, DEFAULT_BLOCK_WORDS, bucket_pad
 from repro.core.rowstore import DeviceRowStore
 from repro.kernels import ops
 
@@ -96,13 +96,7 @@ class DeviceMiningStats:
 
 
 def _bucket_pad(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
-    for b in _PAIR_BUCKETS:
-        if n <= b:
-            if n == b:
-                return arr
-            pad_shape = (b - n,) + arr.shape[1:]
-            return np.concatenate([arr, np.full(pad_shape, fill, arr.dtype)])
-    raise ValueError(f"batch of {n} exceeds largest bucket")
+    return bucket_pad(arr, n, _PAIR_BUCKETS, fill)
 
 
 @dataclass

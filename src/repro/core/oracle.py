@@ -26,7 +26,7 @@ from __future__ import annotations
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Hashable, Iterable, List, Sequence, Tuple
+from typing import Dict, FrozenSet, Hashable, List, Sequence, Tuple
 
 Item = Hashable
 Transaction = Sequence[Item]

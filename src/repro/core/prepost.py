@@ -1,17 +1,30 @@
-"""Device PrePost+: batched N-list intersection with early stopping.
+"""Device-resident PrePost+: N-lists live in a pooled device slab.
 
 The PPC-tree build is inherently sequential host preprocessing (one pass
 over the reordered transactions — same category as tokenisation) and is
-shared with the oracle (``oracle.PPCTree``).  The search itself batches all
-extensions of one class member into a single vmapped two-pointer merge on
-the device (kernels/ops.nlist_intersect), carrying the paper's
-``rho_V - skip`` early-stopping criterion (with the Z-mass erratum fix, see
-core/oracle.py) inside the ``lax.while_loop`` guard.
+shared with the oracle (``oracle.PPCTree``).  Everything after it is
+device-resident (the ISSUE 3 unification — third engine on the shared
+allocator): every N-list the DFS can still touch is an extent of one
+persistent ``int32[capacity, 3]`` PPC-code slab
+(``core.rowstore.NListPool``), and the host only ever moves row indices
+and small int vectors around.  Each sibling pair chunk is exactly ONE
+fused device dispatch (``kernels.ops.nlist_extend``):
 
-N-lists are short by construction — that is PrePost+'s selling point — so
-the padded-batch layout wastes little and the sequential merge depth is
-small.  Comparison counts reported by the device path are exactly the
-oracle's (same merge, same abort points); tests assert equality.
+  * gather: both operand N-lists are picked out of the slab by extent
+    offset (no host padding, no re-upload);
+  * merge: the vmapped two-pointer merge carries the paper's
+    ``rho_V - skip`` early-stopping criterion (with the Z-mass erratum
+    fix, see core/oracle.py) inside the ``lax.while_loop`` guard;
+  * Z-merge + scatter: consecutive slots sharing a V ancestor code are
+    combined on device (Alg. 3 line 31) and the compacted child N-lists
+    are written straight into preallocated extents of the same slab.
+
+Comparison counts reported by the device path are exactly the oracle's
+(same merge, same abort points); tests assert equality (invariant I4).
+``backend`` selects the merge implementation: pure-jnp ``while_loop``
+("jnp", the CPU production path) or the Pallas kernel
+(``kernels/nlist_merge.py``, "pallas"/"auto"-on-TPU), both bit-exact vs
+``kernels.ref.nlist_extend_ref``.
 """
 
 from __future__ import annotations
@@ -22,138 +35,160 @@ from typing import Dict, FrozenSet, Hashable, List, Sequence, Tuple
 
 import numpy as np
 
-import jax.numpy as jnp
-
 from repro.core.oracle import PPCTree, MiningStats
+from repro.core.rowstore import NListPool
+from repro.core.bitmap import bucket_pad, nl_pad_len
 from repro.kernels import ops
-from repro.core.bitmap import NL_SENTINEL
 
 ItemsetSupports = Dict[FrozenSet[Hashable], int]
 
-_LEN_BUCKETS = (8, 32, 128, 512, 2048, 8192, 32768)
+_PAIR_BUCKETS = (64, 256, 1024, 4096, 8192, 32768)
 
 
 def _pad_len(n: int) -> int:
-    for b in _LEN_BUCKETS:
-        if n <= b:
-            return b
-    raise ValueError(f"N-list of length {n} exceeds largest bucket")
+    """Bucketed N-list gather width (power-of-two fallback past the
+    largest tuned bucket — huge N-lists must not be a hard error)."""
+    return nl_pad_len(n)
+
+
+@dataclass
+class DevicePrePostStats(MiningStats):
+    """Oracle-compatible counters plus device-engine accounting."""
+
+    device_calls: int = 0      # fused nlist_extend dispatches
+    pool_grows: int = 0        # code-slab reallocations
+    peak_codes: int = 0        # peak live pool extent mass (code triples)
+
+    def as_dict(self) -> Dict[str, float]:
+        d = super().as_dict()
+        d.update(device_calls=self.device_calls,
+                 pool_grows=self.pool_grows, peak_codes=self.peak_codes)
+        return d
 
 
 @dataclass
 class _Member:
+    """One equivalence-class member: the host handle to a pooled N-list.
+
+    ``row`` is an ``NListPool`` row id — code contents never leave the
+    device."""
+
     itemset: Tuple[Hashable, ...]
-    pre: np.ndarray    # int32 (len,)
-    post: np.ndarray
-    freq: np.ndarray
+    row: int
+    length: int
     support: int
 
 
 class DevicePrePost:
-    """PrePost+ with device-batched NL intersection."""
+    """PrePost+ over a device-resident N-list pool with one fused
+    gather→merge→Z-merge→scatter dispatch per pair chunk."""
 
     def __init__(self, early_stop: bool = True, pair_chunk: int = 8192,
                  backend: str = "auto"):
         self.early_stop = early_stop
-        self.pair_chunk = pair_chunk
+        self.pair_chunk = min(pair_chunk, _PAIR_BUCKETS[-1])
         self.backend = backend
 
     def mine(self, db: Sequence[Sequence[Hashable]], minsup: int,
-             ) -> Tuple[ItemsetSupports, MiningStats]:
+             ) -> Tuple[ItemsetSupports, DevicePrePostStats]:
         if minsup < 1:
             raise ValueError("minsup must be an absolute count >= 1")
-        stats = MiningStats()
+        stats = DevicePrePostStats()
         t0 = time.perf_counter()
 
         tree = PPCTree(db, minsup)
         order_asc = list(reversed(tree.order_desc))
         out: ItemsetSupports = {}
-        members: List[_Member] = []
+        arrays: List[np.ndarray] = []
         for it in order_asc:
-            codes = tree.nlists[it]
             out[frozenset((it,))] = tree.item_support[it]
             stats.nodes += 1
-            arr = np.asarray(codes, np.int32).reshape(-1, 3)
-            members.append(_Member(
-                itemset=(it,), pre=arr[:, 0], post=arr[:, 1],
-                freq=arr[:, 2], support=tree.item_support[it]))
+            arrays.append(np.asarray(tree.nlists[it], np.int32).reshape(-1, 3))
+
+        pool = NListPool(capacity=max(
+            64, 2 * sum(nl_pad_len(max(len(a), 1)) for a in arrays)))
+        rows = pool.alloc_rows([len(a) for a in arrays])
+        if len(arrays):
+            pool.write_rows(rows, arrays)
+        members = [
+            _Member(itemset=(it,), row=int(r), length=len(a),
+                    support=tree.item_support[it])
+            for it, r, a in zip(order_asc, rows, arrays)]
 
         self._minsup = minsup
-        self._traverse(members, out, stats)
+        self._traverse(pool, members, out, stats)
+        stats.pool_grows = pool.grows
+        stats.peak_codes = pool.peak_codes
         stats.runtime_s = time.perf_counter() - t0
         return out, stats
 
-    def _traverse(self, klass: List[_Member], out: ItemsetSupports,
-                  stats: MiningStats) -> None:
+    def _traverse(self, pool: NListPool, klass: List[_Member],
+                  out: ItemsetSupports, stats: DevicePrePostStats) -> None:
         for a in range(len(klass)):
             siblings = klass[a + 1:]
             if not siblings:
+                pool.free_rows([klass[a].row])  # served as V only: spent
                 continue
             children: List[_Member] = []
             for lo in range(0, len(siblings), self.pair_chunk):
                 children.extend(self._extend_chunk(
-                    klass[a], siblings[lo:lo + self.pair_chunk], stats))
+                    pool, klass[a], siblings[lo:lo + self.pair_chunk],
+                    stats))
+            # klass[a] is U here and V only for earlier members: spent.
+            pool.free_rows([klass[a].row])
             for ch in children:
                 out[frozenset(ch.itemset)] = ch.support
                 stats.nodes += 1
             if children:
-                self._traverse(children, out, stats)
+                self._traverse(pool, children, out, stats)
 
-    def _extend_chunk(self, xs: _Member, chunk: List[_Member],
-                      stats: MiningStats) -> List[_Member]:
+    def _extend_chunk(self, pool: NListPool, xs: _Member,
+                      chunk: List[_Member],
+                      stats: DevicePrePostStats) -> List[_Member]:
         n = len(chunk)
         stats.candidates += n
-        lu = _pad_len(len(xs.pre))
-        lv = _pad_len(max(len(s.pre) for s in chunk))
+        lu = nl_pad_len(xs.length)
+        v_len = pool.lengths([s.row for s in chunk])
+        lv = nl_pad_len(int(v_len.max()))
 
-        def pad(vec: np.ndarray, L: int, fill: int) -> np.ndarray:
-            o = np.full((L,), fill, np.int32)
-            o[:len(vec)] = vec
-            return o
+        # Pessimistic child extents: |child| <= min(|U|, |V|); extents of
+        # dead candidates are recycled right after the dispatch, so
+        # infrequent pairs cost free-list bookkeeping only.
+        child_rows = pool.alloc_rows(np.minimum(xs.length, v_len))
 
-        u_pre = np.broadcast_to(pad(xs.pre, lu, NL_SENTINEL), (n, lu))
-        u_post = np.broadcast_to(pad(xs.post, lu, 0), (n, lu))
-        u_freq = np.broadcast_to(pad(xs.freq, lu, 0), (n, lu))
-        v_pre = np.stack([pad(s.pre, lv, NL_SENTINEL) for s in chunk])
-        v_post = np.stack([pad(s.post, lv, 0) for s in chunk])
-        v_freq = np.stack([pad(s.freq, lv, 0) for s in chunk])
-        u_len = np.full((n,), len(xs.pre), np.int32)
-        v_len = np.array([len(s.pre) for s in chunk], np.int32)
-        rho_v = np.array([s.support for s in chunk], np.int32)
+        u_off = np.full((n,), pool.offsets([xs.row])[0], np.int32)
+        u_len = np.full((n,), xs.length, np.int32)
+        v_off = pool.offsets([s.row for s in chunk])
+        out_off = pool.offsets(child_rows)
+        rho_v = np.asarray([s.support for s in chunk], np.int32)
 
-        out_slot, support, cmps, alive = ops.nlist_intersect(
-            jnp.asarray(u_pre), jnp.asarray(u_post), jnp.asarray(u_freq),
-            jnp.asarray(v_pre), jnp.asarray(v_post), jnp.asarray(v_freq),
-            jnp.asarray(u_len), jnp.asarray(v_len), jnp.asarray(rho_v),
-            jnp.int32(self._minsup), early_stop=self.early_stop,
-            backend=self.backend)
-        out_slot = np.asarray(out_slot)
-        support = np.asarray(support)
-        stats.comparisons += int(np.asarray(cmps).sum())
-        stats.es_aborts += int((~np.asarray(alive)).sum())
+        def pad(arr, fill=0):
+            return bucket_pad(arr, n, _PAIR_BUCKETS, fill)
+        (pool.codes, child_len, support, cmps, checks,
+         alive) = ops.nlist_extend(
+            pool.codes, pad(u_off), pad(u_len), pad(v_off), pad(v_len),
+            pad(out_off, fill=pool.capacity),   # OOB pad -> dropped
+            pad(rho_v), np.int32(self._minsup),
+            lu=lu, lv=lv, early_stop=self.early_stop, backend=self.backend)
+        stats.device_calls += 1
+        child_len = np.asarray(child_len[:n])
+        support = np.asarray(support[:n])
+        alive = np.asarray(alive[:n])
+        stats.comparisons += int(np.asarray(cmps[:n]).sum())
+        if self.early_stop:
+            # One ES bound evaluation per skipped V code — exactly the
+            # oracle's es_checks (the non-ES merge evaluates none).
+            stats.es_checks += int(np.asarray(checks[:n]).sum())
+        stats.es_aborts += int((~alive).sum())
 
+        freq = support >= self._minsup   # aborted pairs report support 0
+        pool.free_rows(child_rows[~freq])
         children: List[_Member] = []
-        for b in range(n):
-            if support[b] < self._minsup:
-                continue
-            # Reconstruct the child N-list: slot i of U matched V-code
-            # out_slot[b, i]; merge consecutive slots sharing a V-code
-            # (Alg. 3 line 31 "merge elements in Z").
-            slots = out_slot[b, :len(xs.pre)]
-            matched = slots != NL_SENTINEL
-            js = slots[matched]
-            fs = xs.freq[:len(xs.pre)][matched]
-            if js.size == 0:
-                continue
-            # group-by consecutive equal j (js is non-decreasing: two-pointer)
-            boundaries = np.nonzero(np.diff(js))[0] + 1
-            groups = np.split(np.arange(js.size), boundaries)
-            z_pre = np.array([v_pre[b, js[g[0]]] for g in groups], np.int32)
-            z_post = np.array([v_post[b, js[g[0]]] for g in groups], np.int32)
-            z_freq = np.array([fs[g].sum() for g in groups], np.int32)
+        for b in np.nonzero(freq)[0]:
+            pool.set_length(child_rows[b], child_len[b])
             children.append(_Member(
                 itemset=xs.itemset + (chunk[b].itemset[-1],),
-                pre=z_pre, post=z_post, freq=z_freq,
+                row=int(child_rows[b]), length=int(child_len[b]),
                 support=int(support[b])))
         return children
 

@@ -32,7 +32,7 @@ longer happen: ``alloc`` grows instead of raising.
 
 from __future__ import annotations
 
-from typing import Iterable, List, Optional, Tuple, Union
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.bitmap import popcount32_np, suffix_popcounts
+from repro.core.bitmap import nl_pad_len, popcount32_np, suffix_popcounts
 
 
 def _round_capacity(n: int) -> int:
@@ -150,4 +150,122 @@ class DeviceRowStore:
         self.rows = rows
         self.suffix = suffix
         self._free.extend(range(new - 1, old - 1, -1))
+        self.grows += 1
+
+
+class NListPool:
+    """Device-resident ragged pool of PPC codes (the PrePost+ analogue of
+    the bitmap slab above).
+
+    ``codes`` is one persistent ``int32[capacity, 3]`` device slab of
+    ``(pre, post, freq)`` triples.  An N-list *row* is an extent
+    ``[off, off + cap_len)`` of the slab, with ``cap_len`` bucketed to
+    :func:`repro.core.bitmap.nl_pad_len` sizes; the host keeps the
+    per-row offset/length tables plus one free list of extents per
+    bucket size, and never sees code *contents* — the fused dispatch
+    (``kernels.ops.nlist_extend``) gathers operand rows by offset and
+    scatters child rows back by offset, all inside one jit.
+
+    Growth mirrors ``DeviceRowStore``: capacity doubles (device concat
+    of a zero slab, power-of-two rounded) and live extents are preserved
+    bit-for-bit; exhaustion cannot happen.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        cap = _round_capacity(max(capacity, 1))
+        self.codes = jnp.zeros((cap, 3), jnp.int32)
+        self._free: Dict[int, List[int]] = {}   # bucket size -> extent offs
+        self._bump = 0                          # slab high-water mark
+        self.grows = 0
+        self._row_off: List[int] = []
+        self._row_len: List[int] = []           # actual (exact) lengths
+        self._row_cap: List[int] = []           # bucketed extent sizes
+        self._free_rows: List[int] = []
+        self.live_codes = 0                     # sum of live extent sizes
+        self.peak_codes = 0
+        self.total_alloc_codes = 0              # cumulative extent mass
+
+    @property
+    def capacity(self) -> int:
+        return int(self.codes.shape[0])
+
+    @property
+    def n_live_rows(self) -> int:
+        return len(self._row_off) - len(self._free_rows)
+
+    def _alloc_extent(self, bucket: int) -> int:
+        stack = self._free.get(bucket)
+        if stack:
+            return stack.pop()
+        off = self._bump
+        if off + bucket > self.capacity:
+            self._grow(off + bucket)
+        self._bump = off + bucket
+        return off
+
+    def alloc_rows(self, lengths: Sequence[int]) -> np.ndarray:
+        """One row per requested length (its max capacity); returns int32
+        row ids.  Actual lengths are refined later via set_length."""
+        rows = np.empty(len(lengths), np.int32)
+        for k, ln in enumerate(lengths):
+            ln = int(ln)
+            bucket = nl_pad_len(max(ln, 1))
+            off = self._alloc_extent(bucket)
+            if self._free_rows:
+                r = self._free_rows.pop()
+                self._row_off[r] = off
+                self._row_len[r] = ln
+                self._row_cap[r] = bucket
+            else:
+                r = len(self._row_off)
+                self._row_off.append(off)
+                self._row_len.append(ln)
+                self._row_cap.append(bucket)
+            self.live_codes += bucket
+            self.total_alloc_codes += bucket
+            rows[k] = r
+        self.peak_codes = max(self.peak_codes, self.live_codes)
+        return rows
+
+    def free_rows(self, rows: Iterable[int]) -> None:
+        for r in rows:
+            r = int(r)
+            bucket = self._row_cap[r]
+            self._free.setdefault(bucket, []).append(self._row_off[r])
+            self._free_rows.append(r)
+            self.live_codes -= bucket
+
+    def set_length(self, row: int, length: int) -> None:
+        self._row_len[int(row)] = int(length)
+
+    def offsets(self, rows: Sequence[int]) -> np.ndarray:
+        return np.asarray([self._row_off[int(r)] for r in rows], np.int32)
+
+    def lengths(self, rows: Sequence[int]) -> np.ndarray:
+        return np.asarray([self._row_len[int(r)] for r in rows], np.int32)
+
+    def write_rows(self, rows: Sequence[int],
+                   code_arrays: Sequence[np.ndarray]) -> None:
+        """Upload row contents from host (packing time only: the level-1
+        N-lists come out of the PPC-tree build).  One scatter."""
+        idx = np.concatenate([
+            np.arange(self._row_off[int(r)],
+                      self._row_off[int(r)] + len(a), dtype=np.int64)
+            for r, a in zip(rows, code_arrays)])
+        vals = np.concatenate([np.asarray(a, np.int32).reshape(-1, 3)
+                               for a in code_arrays])
+        self.codes = self.codes.at[jnp.asarray(idx)].set(jnp.asarray(vals))
+
+    def read_row(self, row: int) -> np.ndarray:
+        """Row contents as ``int32 (len, 3)`` — tests/debug only (the
+        mining hot path never materialises N-lists on host)."""
+        off = self._row_off[int(row)]
+        ln = self._row_len[int(row)]
+        return np.asarray(self.codes[off:off + ln])
+
+    def _grow(self, need: int) -> None:
+        old = self.capacity
+        new = _round_capacity(max(2 * old, need))
+        self.codes = jnp.concatenate(
+            [self.codes, jnp.zeros((new - old, 3), jnp.int32)])
         self.grows += 1

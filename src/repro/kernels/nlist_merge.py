@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: batched PrePost+ N-list merge with early stopping.
+
+The sequential heart of ``ops.nlist_extend`` (DESIGN.md §Errata for the
+ES criterion): one grid program per candidate pair walks the two operand
+PP-code lists with a two-pointer ``lax.while_loop``, records which V
+ancestor code each U code matched (``out_slot``), and aborts the moment
+the corrected bound ``z_mass + (rho_V - skip)`` drops below minsup.
+
+Grid/layout mirrors ``bitmap_intersect.py``: operand rows are
+``(1, L)`` VMEM blocks indexed dynamically by the loop carry; per-pair
+scalars (lengths, rho, outputs) live in SMEM.  N-lists are short by
+construction — PrePost+'s selling point — so the bucketed ``(1, L)``
+rows are tiny VMEM residents.
+
+Semantics are defined by ``kernels/ref.py::_nl_merge_vmapped`` (the body
+of ``nlist_intersect_ref`` / ``nlist_extend_ref``) and must match it
+bit-for-bit; tests/test_kernels.py sweeps shapes, lengths, ES on/off and
+minsup values.  The surrounding gather / Z-merge / scatter of the fused
+dispatch stay in jnp around this kernel (``ops.nlist_extend``) so the
+whole extension is still ONE device dispatch per pair chunk.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bitmap import NL_SENTINEL
+
+
+def _kernel(early_stop: bool, lu: int,
+            minsup_ref, up_ref, upo_ref, uf_ref, vp_ref, vpo_ref, vf_ref,
+            nu_ref, nv_ref, rho_ref,
+            slot_ref, mass_ref, cmp_ref, chk_ref, alive_ref):
+    """One candidate pair: two-pointer NL merge.
+
+    minsup_ref: (1,) SMEM             — scalar threshold
+    up/upo/uf_ref: (1, lu) VMEM       — U (pre, post, freq) rows
+    vp/vpo/vf_ref: (1, lv) VMEM       — V rows
+    nu/nv/rho_ref: (1,) SMEM          — actual lengths + sibling support
+    slot_ref: (1, lu) VMEM            — matched V index per U slot
+    mass_ref/cmp_ref/chk_ref/alive_ref: (1,) SMEM outputs
+    """
+    minsup = minsup_ref[0]
+    nu = nu_ref[0]
+    nv = nv_ref[0]
+    rho = rho_ref[0]
+
+    # Unmatched slots must read back as sentinel: clear the row first.
+    slot_ref[0] = jnp.full((lu,), NL_SENTINEL, jnp.int32)
+
+    def cond(st):
+        i, j, _, _, _, _, alive = st
+        return jnp.logical_and(jnp.logical_and(i < nu, j < nv), alive)
+
+    def body(st):
+        i, j, z_mass, skip, cmps, checks, alive = st
+        cmps = cmps + 1
+        xi_pre = up_ref[0, i]
+        xi_post = upo_ref[0, i]
+        xi_f = uf_ref[0, i]
+        yj_pre = vp_ref[0, j]
+        yj_post = vpo_ref[0, j]
+        yj_f = vf_ref[0, j]
+        is_desc = jnp.logical_and(xi_pre > yj_pre, xi_post < yj_post)
+        adv = jnp.logical_or(is_desc, xi_pre <= yj_pre)
+        slot_ref[0, i] = jnp.where(is_desc, j, slot_ref[0, i])
+        z_mass = z_mass + jnp.where(is_desc, xi_f, 0)
+        skip = skip + jnp.where(adv, 0, yj_f)
+        checks = checks + jnp.where(adv, 0, 1)
+        if early_stop:
+            alive = jnp.logical_and(alive, z_mass + (rho - skip) >= minsup)
+        i = i + jnp.where(adv, 1, 0)
+        j = j + jnp.where(adv, 0, 1)
+        return i, j, z_mass, skip, cmps, checks, alive
+
+    init = (jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.int32(0), jnp.int32(0), jnp.bool_(True))
+    _, _, z_mass, _, cmps, checks, alive = jax.lax.while_loop(
+        cond, body, init)
+    mass_ref[0] = z_mass
+    cmp_ref[0] = cmps
+    chk_ref[0] = checks
+    alive_ref[0] = alive.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("early_stop", "interpret"))
+def nlist_merge(
+    u_pre: jnp.ndarray, u_post: jnp.ndarray, u_freq: jnp.ndarray,  # (P, Lu)
+    v_pre: jnp.ndarray, v_post: jnp.ndarray, v_freq: jnp.ndarray,  # (P, Lv)
+    u_len: jnp.ndarray, v_len: jnp.ndarray,                        # (P,)
+    rho_v: jnp.ndarray,                                            # (P,)
+    minsup: jnp.ndarray,                                           # scalar
+    *,
+    early_stop: bool = True,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
+    """Pallas NL merge.  Returns ``(out_slot, support, comparisons,
+    checks, alive)`` bit-exact vs ``ref._nl_merge_vmapped``."""
+    n_pairs, lu = u_pre.shape
+    _, lv = v_pre.shape
+    minsup_arr = jnp.reshape(jnp.asarray(minsup, jnp.int32), (1,))
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+
+    kernel = functools.partial(_kernel, early_stop, lu)
+    out_slot, z_mass, cmps, checks, alive_i = pl.pallas_call(
+        kernel,
+        grid=(n_pairs,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # minsup (whole array)
+            pl.BlockSpec((1, lu), lambda p: (p, 0)),
+            pl.BlockSpec((1, lu), lambda p: (p, 0)),
+            pl.BlockSpec((1, lu), lambda p: (p, 0)),
+            pl.BlockSpec((1, lv), lambda p: (p, 0)),
+            pl.BlockSpec((1, lv), lambda p: (p, 0)),
+            pl.BlockSpec((1, lv), lambda p: (p, 0)),
+            pl.BlockSpec((1,), lambda p: (p,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda p: (p,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda p: (p,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, lu), lambda p: (p, 0)),
+            pl.BlockSpec((1,), lambda p: (p,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda p: (p,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda p: (p,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda p: (p,), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pairs, lu), jnp.int32),
+            jax.ShapeDtypeStruct((n_pairs,), jnp.int32),
+            jax.ShapeDtypeStruct((n_pairs,), jnp.int32),
+            jax.ShapeDtypeStruct((n_pairs,), jnp.int32),
+            jax.ShapeDtypeStruct((n_pairs,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(minsup_arr, i32(u_pre), i32(u_post), i32(u_freq),
+      i32(v_pre), i32(v_post), i32(v_freq),
+      i32(u_len), i32(v_len), i32(rho_v))
+    alive = alive_i.astype(jnp.bool_)
+    support = jnp.where(alive, z_mass, 0)  # aborted => certified < minsup
+    return out_slot, support, cmps, checks, alive

@@ -231,9 +231,67 @@ def embedding_bag(table, ids, mask, *, combiner: str = "mean",
 def nlist_intersect(u_pre, u_post, u_freq, v_pre, v_post, v_freq,
                     u_len, v_len, rho_v, minsup, *, early_stop: bool = True,
                     backend: str = "auto"):
-    """Batched padded N-list intersection (PrePost+ device path)."""
-    del backend  # sequential merge: the vmapped while_loop IS the kernel
+    """Batched padded N-list merge (kernel micro-bench entry point).
+
+    The mining hot path uses :func:`nlist_extend` — this standalone
+    variant takes host-materialised padded batches."""
+    b = _resolve(backend)
+    if b == "pallas":
+        from .nlist_merge import nlist_merge as _pallas_merge
+        return _pallas_merge(u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+                             u_len, v_len, rho_v, minsup,
+                             early_stop=early_stop,
+                             interpret=not _on_tpu())
     return _ref.nlist_intersect_ref(u_pre, u_post, u_freq,
                                     v_pre, v_post, v_freq,
                                     u_len, v_len, rho_v, minsup,
                                     early_stop=early_stop)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lu", "lv", "early_stop", "backend"),
+                   donate_argnums=(0,))
+def _nlist_extend_impl(codes, u_off, u_len, v_off, v_len, out_off, rho_v,
+                       minsup, *, lu, lv, early_stop, backend):
+    u_pre, u_post, u_freq = _ref._nl_gather(codes, u_off, u_len, lu)
+    v_pre, v_post, v_freq = _ref._nl_gather(codes, v_off, v_len, lv)
+    if backend == "pallas":
+        from .nlist_merge import nlist_merge as _pallas_merge
+        out_slot, support, cmps, checks, alive = _pallas_merge(
+            u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+            u_len, v_len, rho_v, minsup, early_stop=early_stop,
+            interpret=not _on_tpu())
+    else:
+        out_slot, support, cmps, checks, alive = _ref._nl_merge_vmapped(
+            u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+            u_len, v_len, rho_v, minsup, early_stop=early_stop)
+    codes, child_len = _ref._nl_zmerge_scatter(
+        codes, out_slot, u_freq, v_pre, v_post, out_off)
+    return codes, child_len, support, cmps, checks, alive
+
+
+def nlist_extend(codes, u_off, u_len, v_off, v_len, out_off, rho_v, minsup,
+                 *, lu: int, lv: int, early_stop: bool = True,
+                 backend: str = "auto"):
+    """Fused PrePost+ class extension over a device N-list pool.
+
+    The N-list analogue of :func:`screen_and_intersect` (one dispatch per
+    pair chunk): gathers both operand N-lists from the ``codes`` slab by
+    extent offset, runs the two-pointer merge with the
+    ``z_mass + (rho_V - skip)`` ES guard (bit-exact vs
+    ``ref.nlist_extend_ref``, comparison counts exactly the oracle's),
+    Z-merges consecutive same-ancestor slots on device and scatters the
+    compacted child N-lists back into the pool at ``out_off`` — no host
+    N-list materialisation between levels.
+
+    ``codes`` is DONATED: callers must replace their handle with the
+    returned slab.  Returns
+    ``(codes, child_len, support, comparisons, checks, alive)``.
+    """
+    b = _resolve(backend)
+    return _nlist_extend_impl(
+        codes, jnp.asarray(u_off, jnp.int32), jnp.asarray(u_len, jnp.int32),
+        jnp.asarray(v_off, jnp.int32), jnp.asarray(v_len, jnp.int32),
+        jnp.asarray(out_off, jnp.int32), jnp.asarray(rho_v, jnp.int32),
+        jnp.asarray(minsup, jnp.int32), lu=lu, lv=lv,
+        early_stop=early_stop, backend=b)

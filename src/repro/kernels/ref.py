@@ -273,6 +273,61 @@ def embedding_bag_ref(table, ids, mask, *, combiner: str = "mean"):
 NL_SENTINEL = _NL
 
 
+def _nl_merge_vmapped(u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+                      u_len, v_len, rho_v, minsup, *, early_stop: bool):
+    """Batched two-pointer NL merge with the ``rho_V - skip`` ES guard.
+
+    Shared body of :func:`nlist_intersect_ref` and
+    :func:`nlist_extend_ref`; the Pallas kernel
+    (``kernels/nlist_merge.py``) must reproduce it bit-for-bit.
+    Returns ``(out_slot, support, comparisons, checks, alive)`` where
+    slot ``i`` of ``out_slot`` holds the V index matched by U code ``i``
+    (or sentinel), in U order.  ``checks`` counts skip-branch
+    (j-advance) iterations — exactly the oracle's ``es_checks`` when ES
+    is on (the bound is evaluated once per skipped V code)."""
+    minsup = jnp.asarray(minsup, jnp.int32)
+    _, Lu = u_pre.shape
+
+    def one_pair(up, upost, uf, vp, vpost, vf, nu, nv, rv):
+        def cond(st):
+            i, j, _, _, _, _, alive, _ = st
+            return jnp.logical_and(jnp.logical_and(i < nu, j < nv), alive)
+
+        def body(st):
+            i, j, z_mass, skip, cmps, checks, alive, out_slot = st
+            cmps = cmps + 1
+            xi_pre, xi_post, xi_f = up[i], upost[i], uf[i]
+            yj_pre, yj_post, yj_f = vp[j], vpost[j], vf[j]
+            is_desc = jnp.logical_and(xi_pre > yj_pre, xi_post < yj_post)
+            adv_i_nomatch = xi_pre <= yj_pre
+            adv_i = jnp.logical_or(is_desc, adv_i_nomatch)
+            # match: record ancestor code at slot i, advance i
+            out_slot = out_slot.at[i].set(
+                jnp.where(is_desc, j, out_slot[i]))
+            z_mass = z_mass + jnp.where(is_desc, xi_f, 0)
+            skip = skip + jnp.where(adv_i, 0, yj_f)
+            checks = checks + jnp.where(adv_i, 0, 1)
+            if early_stop:
+                alive = jnp.logical_and(
+                    alive, z_mass + (rv - skip) >= minsup)
+            i = i + jnp.where(adv_i, 1, 0)
+            j = j + jnp.where(adv_i, 0, 1)
+            return i, j, z_mass, skip, cmps, checks, alive, out_slot
+
+        init = (jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                jnp.int32(0), jnp.int32(0), jnp.bool_(True),
+                jnp.full((Lu,), NL_SENTINEL, jnp.int32))
+        (i, j, z_mass, skip, cmps, checks, alive,
+         out_slot) = jax.lax.while_loop(cond, body, init)
+        support = jnp.where(alive, z_mass, 0)  # aborted => certified < minsup
+        return out_slot, support, cmps, checks, alive
+
+    return jax.vmap(one_pair)(
+        u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+        u_len.astype(jnp.int32), v_len.astype(jnp.int32),
+        rho_v.astype(jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnames=("early_stop",))
 def nlist_intersect_ref(
     u_pre: jnp.ndarray, u_post: jnp.ndarray, u_freq: jnp.ndarray,  # (P, Lu)
@@ -280,53 +335,109 @@ def nlist_intersect_ref(
     u_len: jnp.ndarray, v_len: jnp.ndarray,                        # (P,)
     rho_v: jnp.ndarray, minsup: jnp.ndarray,
     *, early_stop: bool = True,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (z_pre, z_post, z_freq_mass_per_slot, support, comparisons).
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
+    """Padded-batch NL merge: returns (out_slot, support, comparisons,
+    checks, alive).  Kernel-bench entry point; the mining hot path uses
+    :func:`nlist_extend_ref` / ``ops.nlist_extend`` which add the pool
+    gather, Z-merge compaction and scatter around this merge."""
+    return _nl_merge_vmapped(u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+                             u_len, v_len, rho_v, minsup,
+                             early_stop=early_stop)
 
-    Output N-list slots follow U's ordering (slot i holds the ancestor code
-    matched by U[i], or sentinel).  Same-code merging is left to the host
-    (it only compacts storage; support is already exact here)."""
-    minsup = jnp.asarray(minsup, jnp.int32)
-    P, Lu = u_pre.shape
-    _, Lv = v_pre.shape
 
-    def one_pair(up, upost, uf, vp, vpost, vf, nu, nv, rv):
-        def cond(st):
-            i, j, _, _, _, alive, _ = st
-            return jnp.logical_and(jnp.logical_and(i < nu, j < nv), alive)
+def _nl_gather(codes, off, length, width: int):
+    """Gather padded (pre, post, freq) rows from the pool slab.
 
-        def body(st):
-            i, j, z_mass, skip, cmps, alive, out_pre = st
-            cmps = cmps + 1
-            xi_pre, xi_post, xi_f = up[i], upost[i], uf[i]
-            yj_pre, yj_post, yj_f = vp[j], vpost[j], vf[j]
-            is_desc = jnp.logical_and(xi_pre > yj_pre, xi_post < yj_post)
-            adv_i_nomatch = xi_pre <= yj_pre
-            # match: record ancestor code at slot i, advance i
-            out_pre = out_pre.at[i].set(
-                jnp.where(is_desc, j, out_pre[i]))
-            z_mass = z_mass + jnp.where(is_desc, xi_f, 0)
-            skip_inc = jnp.where(
-                jnp.logical_or(is_desc, adv_i_nomatch), 0, yj_f)
-            skip = skip + skip_inc
-            if early_stop:
-                alive = jnp.logical_and(
-                    alive, z_mass + (rv - skip) >= minsup)
-            i = i + jnp.where(jnp.logical_or(is_desc, adv_i_nomatch), 1, 0)
-            j = j + jnp.where(
-                jnp.logical_or(is_desc, adv_i_nomatch), 0, 1)
-            return i, j, z_mass, skip, cmps, alive, out_pre
+    ``codes int32 (cap, 3)``, ``off/length int32 (P,)`` -> three
+    ``(P, width)`` arrays, sentinel-padded past each row's length."""
+    cap = codes.shape[0]
+    idx = off[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
+    mask = jnp.arange(width, dtype=jnp.int32)[None, :] < length[:, None]
+    g = jnp.take(codes, jnp.minimum(idx, cap - 1), axis=0)
+    pre = jnp.where(mask, g[..., 0], NL_SENTINEL)
+    post = jnp.where(mask, g[..., 1], 0)
+    freq = jnp.where(mask, g[..., 2], 0)
+    return pre, post, freq
 
-        init = (jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
-                jnp.int32(0), jnp.bool_(True),
-                jnp.full((Lu,), NL_SENTINEL, jnp.int32))
-        i, j, z_mass, skip, cmps, alive, out_pre = jax.lax.while_loop(
-            cond, body, init)
-        support = jnp.where(alive, z_mass, 0)  # aborted => certified < minsup
-        return out_pre, support, cmps, alive
 
-    out_pre, support, cmps, alive = jax.vmap(one_pair)(
+def _nl_zmerge_scatter(codes, out_slot, u_freq, v_pre, v_post, out_off):
+    """Device Z-merge (Alg. 3 line 31) + child scatter into the pool.
+
+    Consecutive U slots matching the same V ancestor code are one child
+    element whose frequency is the group's U-frequency mass.  ``out_slot``
+    is non-decreasing over matched slots (two-pointer order), so group
+    starts are exactly the positions where the slot value exceeds the
+    running maximum of previous matched slots.  Children are compacted to
+    the front of their extents at ``out_off`` (offsets past the slab
+    capacity are dropped — pair padding).
+
+    Returns ``(codes, child_len)``."""
+    P, Lu = out_slot.shape
+    cap = codes.shape[0]
+    valid = out_slot != NL_SENTINEL
+    js = jnp.where(valid, out_slot, -1)
+    running = jax.lax.cummax(js, axis=1)
+    prev = jnp.concatenate(
+        [jnp.full((P, 1), -1, js.dtype), running[:, :-1]], axis=1)
+    start = jnp.logical_and(valid, out_slot != prev)
+    gid = jnp.cumsum(start.astype(jnp.int32), axis=1) - 1
+    child_len = jnp.sum(start.astype(jnp.int32), axis=1)
+
+    rows = jnp.broadcast_to(jnp.arange(P)[:, None], (P, Lu))
+    # per-group U-frequency mass (scatter-add; invalid slots -> dropped)
+    zfreq = jnp.zeros((P, Lu), jnp.int32).at[
+        rows, jnp.where(valid, gid, Lu)].add(
+        jnp.where(valid, u_freq, 0), mode="drop")
+    # per-group representative V slot (unique per group: set at starts)
+    rep = jnp.zeros((P, Lu), jnp.int32).at[
+        rows, jnp.where(start, gid, Lu)].set(
+        jnp.where(start, out_slot, 0), mode="drop")
+    zpre = jnp.take_along_axis(v_pre, rep, axis=1)
+    zpost = jnp.take_along_axis(v_post, rep, axis=1)
+
+    k = jnp.arange(Lu, dtype=jnp.int32)[None, :]
+    dest = jnp.where(k < child_len[:, None], out_off[:, None] + k, cap)
+    child = jnp.stack([zpre, zpost, zfreq], axis=-1)
+    codes = codes.at[dest].set(child, mode="drop")
+    return codes, child_len
+
+
+@functools.partial(jax.jit, static_argnames=("lu", "lv", "early_stop"))
+def nlist_extend_ref(
+    codes: jnp.ndarray,        # int32 (capacity, 3) N-list pool slab
+    u_off: jnp.ndarray, u_len: jnp.ndarray,    # int32 (P,)
+    v_off: jnp.ndarray, v_len: jnp.ndarray,    # int32 (P,)
+    out_off: jnp.ndarray,      # int32 (P,) child extents (OOB -> dropped)
+    rho_v: jnp.ndarray,        # int32 (P,) sibling supports (ES bound)
+    minsup: jnp.ndarray,       # int32 scalar
+    *, lu: int, lv: int, early_stop: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray, jnp.ndarray]:
+    """Fused PrePost+ class extension over a device N-list pool.
+
+    The exact semantics ``ops.nlist_extend`` must reproduce bit-for-bit
+    (jnp and pallas backends) — the N-list analogue of
+    :func:`screen_and_intersect_ref`.  One dispatch per pair chunk:
+
+      * gather both operand N-lists from ``codes`` by extent offset
+        (``lu``/``lv`` are the bucketed gather widths, static);
+      * run the two-pointer merge with the corrected
+        ``z_mass + (rho_V - skip) < minsup`` ES guard (see
+        core/oracle.py erratum note) — comparison counts are exactly the
+        oracle's;
+      * Z-merge consecutive same-ancestor slots on device and scatter the
+        compacted child N-lists into the pool at ``out_off``.
+
+    Returns ``(codes, child_len, support, comparisons, checks, alive)``;
+    aborted pairs report support 0 (certified infrequent) and their
+    partially written extents are recycled by the caller."""
+    u_pre, u_post, u_freq = _nl_gather(codes, u_off, u_len, lu)
+    v_pre, v_post, v_freq = _nl_gather(codes, v_off, v_len, lv)
+    out_slot, support, cmps, checks, alive = _nl_merge_vmapped(
         u_pre, u_post, u_freq, v_pre, v_post, v_freq,
-        u_len.astype(jnp.int32), v_len.astype(jnp.int32),
-        rho_v.astype(jnp.int32))
-    return out_pre, support, cmps, alive
+        u_len, v_len, rho_v, minsup, early_stop=early_stop)
+    codes, child_len = _nl_zmerge_scatter(
+        codes, out_slot, u_freq, v_pre, v_post,
+        jnp.asarray(out_off, jnp.int32))
+    return codes, child_len, support, cmps, checks, alive

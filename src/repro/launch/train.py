@@ -21,8 +21,6 @@ import dataclasses
 import time
 from typing import Any, Dict, Optional
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 

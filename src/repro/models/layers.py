@@ -42,11 +42,11 @@ def dense_init(rng, d_in: int, d_out: int, *, bias: bool = False,
     scale = 1.0 / (d_in ** 0.5)
     p = {"kernel": (jax.random.normal(rng, (d_in, d_out), jnp.float32)
                     * scale).astype(dtype)}
-    l = {"kernel": axes}
+    lg = {"kernel": axes}
     if bias:
         p["bias"] = jnp.zeros((d_out,), dtype)
-        l["bias"] = (axes[-1],)
-    return p, l
+        lg["bias"] = (axes[-1],)
+    return p, lg
 
 
 def dense(p: Params, x: jnp.ndarray, compute_dtype=jnp.bfloat16):
@@ -92,11 +92,9 @@ def _rmsnorm_bwd(eps, res, g):
     coeff = (inv * inv * inv * dot / d).astype(x.dtype)  # (..., 1)
     d_x = gs * inv_b - x * coeff
     xin = x * inv_b
-    reduce_axes = tuple(range(x.ndim - 1))
     d_scale = jnp.einsum(
         "...d,...d->d" if x.ndim > 1 else "d,d->d", g, xin,
         preferred_element_type=jnp.float32).astype(scale.dtype)
-    del reduce_axes
     return d_x, d_scale
 
 
@@ -194,7 +192,7 @@ def chunked_attention(q: jnp.ndarray,       # (B, Sq, H, Dh)
     neg = jnp.float32(-1e30)
 
     def step(carry, xs):
-        m, l, acc = carry
+        m, den, acc = carry
         k_j, v_j, j = xs
         kv_pos = j * chunk + jnp.arange(chunk)
         s = jnp.einsum("bqkgd,bckd->bqkgc", qg.astype(jnp.float32),
@@ -214,26 +212,26 @@ def chunked_attention(q: jnp.ndarray,       # (B, Sq, H, Dh)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + p.sum(axis=-1)
+        den_new = den * corr + p.sum(axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bqkgc,bckv->bqkgv", p, v_j.astype(jnp.float32),
             preferred_element_type=jnp.float32)
-        return (m_new, l_new, acc_new), None
+        return (m_new, den_new, acc_new), None
 
     m0 = jnp.full((B, Sq, KH, G), neg, jnp.float32)
-    l0 = jnp.zeros((B, Sq, KH, G), jnp.float32)
+    den0 = jnp.zeros((B, Sq, KH, G), jnp.float32)
     a0 = jnp.zeros((B, Sq, KH, G, Dv), jnp.float32)
     if unroll:
         # Costing mode (launch/dryrun.py): cost_analysis counts a scan
         # body once, so the chunk walk is unrolled to be costed exactly.
-        carry = (m0, l0, a0)
+        carry = (m0, den0, a0)
         for j in range(n_chunks):
             carry, _ = step(carry, (kc[j], vc[j], jnp.int32(j)))
-        m, l, acc = carry
+        m, den, acc = carry
     else:
-        (m, l, acc), _ = jax.lax.scan(
-            step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+        (m, den, acc), _ = jax.lax.scan(
+            step, (m0, den0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(den[..., None], 1e-30)
     return out.reshape(B, Sq, H, Dv).astype(q.dtype)
 
 
@@ -256,7 +254,7 @@ def gqa_init(rng, d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
         "wo": (jax.random.normal(r[3], (n_heads, d_head, d_model),
                                  jnp.float32) * s).astype(dtype),
     }
-    l: Logical = {
+    lg: Logical = {
         "wq": ("embed", "heads", "head_dim"),
         "wk": ("embed", "kv_heads", "head_dim"),
         "wv": ("embed", "kv_heads", "head_dim"),
@@ -266,10 +264,10 @@ def gqa_init(rng, d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
         p["bq"] = jnp.zeros((n_heads, d_head), dtype)
         p["bk"] = jnp.zeros((n_kv_heads, d_head), dtype)
         p["bv"] = jnp.zeros((n_kv_heads, d_head), dtype)
-        l["bq"] = ("heads", "head_dim")
-        l["bk"] = ("kv_heads", "head_dim")
-        l["bv"] = ("kv_heads", "head_dim")
-    return p, l
+        lg["bq"] = ("heads", "head_dim")
+        lg["bk"] = ("kv_heads", "head_dim")
+        lg["bv"] = ("kv_heads", "head_dim")
+    return p, lg
 
 
 def gqa_apply(p: Params, x: jnp.ndarray, *, positions: jnp.ndarray,
@@ -390,30 +388,30 @@ def mla_init(rng, dims: MLADims, dtype=jnp.bfloat16) -> Tuple[Params, Logical]:
         return (jax.random.normal(rng_, shape, jnp.float32) * s).astype(dtype)
 
     p: Params = {}
-    l: Logical = {}
+    lg: Logical = {}
     if dims.q_lora:
         p["wq_a"] = w(r[0], (d, dims.q_lora))
-        l["wq_a"] = ("embed", "lora")
+        lg["wq_a"] = ("embed", "lora")
         p["q_norm"], ln = rmsnorm_init(dims.q_lora, dtype)
         p["q_norm"] = p["q_norm"]["scale"]
-        l["q_norm"] = ("lora",)
+        lg["q_norm"] = ("lora",)
         p["wq_b"] = w(r[1], (dims.q_lora, H, dims.d_nope + dims.d_rope))
-        l["wq_b"] = ("lora", "heads", "head_dim")
+        lg["wq_b"] = ("lora", "heads", "head_dim")
         del ln
     else:
         p["wq"] = w(r[1], (d, H, dims.d_nope + dims.d_rope))
-        l["wq"] = ("embed", "heads", "head_dim")
+        lg["wq"] = ("embed", "heads", "head_dim")
     p["wkv_a"] = w(r[2], (d, dims.kv_lora + dims.d_rope))
-    l["wkv_a"] = ("embed", "lora")
+    lg["wkv_a"] = ("embed", "lora")
     p["kv_norm"] = rmsnorm_init(dims.kv_lora, dtype)[0]["scale"]
-    l["kv_norm"] = ("lora",)
+    lg["kv_norm"] = ("lora",)
     p["wk_b"] = w(r[3], (dims.kv_lora, H, dims.d_nope))
-    l["wk_b"] = ("lora", "heads", "head_dim")
+    lg["wk_b"] = ("lora", "heads", "head_dim")
     p["wv_b"] = w(r[4], (dims.kv_lora, H, dims.d_v))
-    l["wv_b"] = ("lora", "heads", "head_dim")
+    lg["wv_b"] = ("lora", "heads", "head_dim")
     p["wo"] = w(r[5], (H, dims.d_v, d))
-    l["wo"] = ("heads", "head_dim", "embed")
-    return p, l
+    lg["wo"] = ("heads", "head_dim", "embed")
+    return p, lg
 
 
 def _mla_q(p, x, dims: MLADims, cd):
@@ -469,7 +467,6 @@ def mla_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
     absorbed into the query and w_uv into the output so per-step compute
     scales with kv_lora, not n_heads * d_head * S (DeepSeek-V2 §2.1)."""
     cd = compute_dtype
-    B = x.shape[0]
     pos = cache["len"]
     q_nope, q_rope = _mla_q(p, x, dims, cd)               # (B,1,H,*)
     q_rope = apply_rope(q_rope, pos[:, None], rope_theta)
@@ -520,9 +517,9 @@ def swiglu_init(rng, d: int, f: int, dtype=jnp.bfloat16,
         "w_down": (jax.random.normal(r[2], (f, d), jnp.float32)
                    * s_out).astype(dtype),
     }
-    l = {"w_gate": ("embed", ff_axis), "w_up": ("embed", ff_axis),
+    lg = {"w_gate": ("embed", ff_axis), "w_up": ("embed", ff_axis),
          "w_down": (ff_axis, "embed")}
-    return p, l
+    return p, lg
 
 
 def swiglu(p: Params, x: jnp.ndarray, compute_dtype=jnp.bfloat16):
@@ -563,7 +560,7 @@ def moe_init(rng, dims: MoEDims, dtype=jnp.bfloat16) -> Tuple[Params, Logical]:
         "w_up": w(r[2], (E, d, f), s_in),
         "w_down": w(r[3], (E, f, d), s_out),
     }
-    l: Logical = {
+    lg: Logical = {
         "router": ("embed", None),
         "w_gate": ("experts", "embed", "expert_ff"),
         "w_up": ("experts", "embed", "expert_ff"),
@@ -572,8 +569,8 @@ def moe_init(rng, dims: MoEDims, dtype=jnp.bfloat16) -> Tuple[Params, Logical]:
     if dims.n_shared:
         sp, sl = swiglu_init(r[4], d, dims.n_shared * f, dtype, ff_axis="ff")
         p["shared"] = sp
-        l["shared"] = sl
-    return p, l
+        lg["shared"] = sl
+    return p, lg
 
 
 def _pick_groups(preferred: int, T: int) -> int:

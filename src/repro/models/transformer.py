@@ -119,20 +119,20 @@ def _layer_init(rng, cfg: LMConfig, use_moe: bool):
     r = jax.random.split(rng, 4)
     dt = cfg.param_dtype
     p: Dict[str, Any] = {}
-    l: Dict[str, Any] = {}
-    p["attn_norm"], l["attn_norm"] = L.rmsnorm_init(cfg.d_model, dt)
+    lg: Dict[str, Any] = {}
+    p["attn_norm"], lg["attn_norm"] = L.rmsnorm_init(cfg.d_model, dt)
     if cfg.mla:
-        p["attn"], l["attn"] = L.mla_init(r[0], cfg.mla_dims, dt)
+        p["attn"], lg["attn"] = L.mla_init(r[0], cfg.mla_dims, dt)
     else:
-        p["attn"], l["attn"] = L.gqa_init(
+        p["attn"], lg["attn"] = L.gqa_init(
             r[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
             qkv_bias=cfg.qkv_bias, dtype=dt)
-    p["mlp_norm"], l["mlp_norm"] = L.rmsnorm_init(cfg.d_model, dt)
+    p["mlp_norm"], lg["mlp_norm"] = L.rmsnorm_init(cfg.d_model, dt)
     if use_moe:
-        p["mlp"], l["mlp"] = L.moe_init(r[1], cfg.moe_dims, dt)
+        p["mlp"], lg["mlp"] = L.moe_init(r[1], cfg.moe_dims, dt)
     else:
-        p["mlp"], l["mlp"] = L.swiglu_init(r[1], cfg.d_model, cfg.d_ff, dt)
-    return p, l
+        p["mlp"], lg["mlp"] = L.swiglu_init(r[1], cfg.d_model, cfg.d_ff, dt)
+    return p, lg
 
 
 def _stack_init(rng, cfg: LMConfig, n: int, use_moe: bool):
@@ -432,7 +432,6 @@ def decode_step(params, cfg: LMConfig, token: jnp.ndarray,
                 cache: Dict[str, jnp.ndarray],
                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """One token for every sequence.  token (B,) int32 -> logits (B, Vpad)."""
-    B = token.shape[0]
     x = params["embed"]["table"][token][:, None, :]     # (B, 1, D)
     x = constrain(x, ("batch", None, "act_embed"))
     pos = cache["len"]

@@ -43,10 +43,10 @@ def make_train_step(loss_fn: LossFn, opt_cfg: OptConfig,
 
             def accum(carry, mb):
                 g_acc, l_acc = carry
-                (l, m), g = grad_fn(params, mb)
+                (loss_mb, m), g = grad_fn(params, mb)
                 g_acc = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                return (g_acc, l_acc + l), m
+                return (g_acc, l_acc + loss_mb), m
 
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)

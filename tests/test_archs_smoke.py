@@ -161,7 +161,7 @@ def test_fim_smoke_mining_round_single_device():
     import numpy as np
     from repro.compat import make_mesh
     from repro.core.distributed import make_mining_round
-    from repro.core.bitmap import pack_tidlists, popcount32_np
+    from repro.core.bitmap import popcount32_np
 
     mesh = make_mesh((1, 1), ("data", "model"))
     round_fn = jax.jit(make_mining_round(mesh, pair_chunk=8))

@@ -1,21 +1,16 @@
-"""Correctness of the paper's algorithms + the device engines.
+"""The paper's running example + headline-effect checks.
 
-Invariants (paper §III-IV):
-  I1  every miner x {ES on/off} returns exactly the frequent itemsets;
-  I2  early stopping NEVER changes the result set (the criterion is exact);
-  I3  ES never increases the comparison count (paper's guarantee);
-  I4  the device PrePost+ comparison counts equal the oracle's exactly;
-  I5  bitmap engines agree with the oracle bit-for-bit.
+The invariants I1-I5 (every miner x {ES on/off} x backend == brute
+force, ES never increases comparisons, device PrePost+ counters equal
+the oracle's) are pinned by the property-based cross-engine harness in
+tests/test_equivalence.py; this module keeps the paper's worked example
+(Table I / Examples 3.1-4.2) and the qualitative ES-savings claims.
 """
 
-import random
-
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.oracle import (mine, mine_bruteforce, MINERS)
 from repro.core.eclat import mine_bitmap
-from repro.core.prepost import mine_prepost_device
 
 PAPER_DB = [list(t) for t in
             ["ade", "bcd", "ace", "acde", "ae", "acd", "bc", "acde",
@@ -52,70 +47,6 @@ def test_es_reduces_comparisons(scheme):
     assert es.es_aborts > 0                           # ES actually fired
 
 
-# ---------------------------------------------------------------------------
-# property-based: random DBs, all miners agree with brute force
-# ---------------------------------------------------------------------------
-
-@st.composite
-def small_db(draw):
-    n_items = draw(st.integers(3, 8))
-    n_trans = draw(st.integers(3, 24))
-    dens = draw(st.sampled_from([0.25, 0.5, 0.75]))
-    rng = random.Random(draw(st.integers(0, 2 ** 31)))
-    db = [[i for i in range(n_items) if rng.random() < dens]
-          for _ in range(n_trans)]
-    db = [t for t in db if t]
-    if not db:
-        db = [[0]]
-    minsup = draw(st.integers(1, max(1, len(db) // 2)))
-    return db, minsup
-
-
-@settings(max_examples=30, deadline=None)
-@given(small_db())
-def test_oracles_match_bruteforce(case):
-    db, minsup = case
-    expected = mine_bruteforce(db, minsup)
-    for scheme in MINERS:
-        for es in (False, True):
-            out, _ = mine(db, minsup, scheme, early_stop=es)
-            assert out == expected, (scheme, es, minsup)   # I1, I2
-
-
-@settings(max_examples=15, deadline=None)
-@given(small_db())
-def test_bitmap_engines_match_bruteforce(case):
-    db, minsup = case
-    expected = mine_bruteforce(db, minsup)
-    for scheme in ("eclat", "declat"):
-        for es in (False, True):
-            out, _ = mine_bitmap(db, minsup, scheme=scheme, early_stop=es,
-                                 block_words=8)
-            assert out == expected, (scheme, es)           # I5
-
-
-@settings(max_examples=15, deadline=None)
-@given(small_db())
-def test_device_prepost_matches_oracle_exactly(case):
-    db, minsup = case
-    for es in (False, True):
-        o_out, o_stats = mine(db, minsup, "prepost", early_stop=es)
-        d_out, d_stats = mine_prepost_device(db, minsup, early_stop=es)
-        assert d_out == o_out
-        assert d_stats.comparisons == o_stats.comparisons   # I4
-        assert d_stats.es_aborts == o_stats.es_aborts
-
-
-@settings(max_examples=15, deadline=None)
-@given(small_db())
-def test_es_never_increases_comparisons_property(case):
-    db, minsup = case
-    for scheme in MINERS:
-        _, std = mine(db, minsup, scheme, early_stop=False)
-        _, es = mine(db, minsup, scheme, early_stop=True)
-        assert es.comparisons <= std.comparisons, scheme
-
-
 def test_bitmap_word_ops_savings_on_sparse_data():
     """The paper's headline effect: sparse, high candidate/node-ratio data
     shows large ES work savings in the device engine."""
@@ -128,22 +59,6 @@ def test_bitmap_word_ops_savings_on_sparse_data():
     assert st_es.word_ops < st_no.word_ops
     assert st_es.word_ops_saved_frac > 0.15
     assert st_es.kernel_aborts > 0 and st_es.screened_out > 0
-
-
-@settings(max_examples=10, deadline=None)
-@given(small_db())
-def test_block_granularity_invariance(case):
-    """ES block size changes WORK, never RESULTS: any block_words gives
-    the identical frequent-itemset dict (the bound is exact at every
-    granularity)."""
-    db, minsup = case
-    ref = None
-    for bw in (1, 4, 16):
-        out, _ = mine_bitmap(db, minsup, "eclat", early_stop=True,
-                             block_words=bw)
-        if ref is None:
-            ref = out
-        assert out == ref, bw
 
 
 def test_distributed_screen_bound_tighter_than_central():

@@ -1,10 +1,9 @@
 """Data pipeline: determinism, statistical regimes, sampler validity."""
 
 import numpy as np
-import pytest
 
 from repro.data import make_dataset, DATASET_REPLICAS
-from repro.data.transactions import gen_quest, gen_dense_tabular
+from repro.data.transactions import gen_quest
 from repro.data.lm_data import LMDataConfig, SyntheticLM
 from repro.data.graph_data import (gen_powerlaw_graph, NeighborSampler,
                                    gen_batched_molecules)

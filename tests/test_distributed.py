@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import make_mesh
-from repro.distributed.sharding import (DEFAULT_RULES, logical_spec,
-                                        use_rules, divisibility_report)
+from repro.distributed.sharding import (logical_spec, use_rules,
+                                        divisibility_report)
 from repro.distributed.compression import (quantize_int8, dequantize_int8,
                                            ErrorFeedback)
 
@@ -91,7 +91,6 @@ def test_arch_rules_divisible_on_production_mesh():
         axis_names = ("data", "model")
         shape = {"data": 16, "model": 16}
 
-    import repro.distributed.sharding as S
     for arch_id, spec in REGISTRY.items():
         if spec.family == "fim":
             continue

@@ -1,0 +1,200 @@
+"""Property-based cross-engine equivalence harness (ISSUE 3 satellite).
+
+Replaces the one-strategy smoke coverage that previously lived in
+test_core_mining.py.  Invariants (paper §III-IV):
+
+  I1  every miner x {ES on/off} x backend returns exactly the frequent
+      itemset -> support map of the brute-force oracle;
+  I2  early stopping NEVER changes the result set (the criterion is
+      exact);
+  I3  ES never increases the comparison count (paper's guarantee);
+  I4  the device PrePost+ comparison counts equal the oracle's exactly;
+  I5  bitmap engines agree with the oracle bit-for-bit.
+
+DB generation spans the regimes of the paper's dataset families —
+dense tabular, sparse, powerlaw (retail-like), single-item,
+duplicate-transaction and empty-transaction DBs.  The hypothesis
+strategy (CI) and the deterministic seeded sweeps (which run even when
+hypothesis is absent — see the conftest shim) draw from the same
+generator, so local runs keep real coverage.
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.oracle import mine, mine_bruteforce, MINERS
+from repro.core.eclat import mine_bitmap
+from repro.core.prepost import mine_prepost_device
+
+REGIMES = ("dense", "sparse", "powerlaw", "single-item", "dup-trans",
+           "empty-trans")
+
+
+def gen_db(regime: str, seed: int):
+    """One (db, minsup) case for a regime; deterministic in ``seed``."""
+    rng = random.Random(REGIMES.index(regime) * 65_537 + seed)
+    ni = rng.randint(3, 9)
+    nt = rng.randint(4, 24)
+    if regime == "dense":
+        ni = rng.randint(3, 6)
+        dens = rng.uniform(0.6, 0.9)
+        db = [[i for i in range(ni) if rng.random() < dens]
+              for _ in range(nt)]
+    elif regime == "sparse":
+        dens = rng.uniform(0.1, 0.25)
+        db = [[i for i in range(ni) if rng.random() < dens]
+              for _ in range(nt)]
+    elif regime == "powerlaw":
+        weights = [1.0 / (r + 1) ** 1.5 for r in range(ni)]
+        db = [sorted(set(rng.choices(range(ni), weights=weights,
+                                     k=rng.randint(1, 6))))
+              for _ in range(nt)]
+    elif regime == "single-item":
+        db = [[rng.randrange(ni)] for _ in range(nt)]
+        if rng.random() < 0.5:           # occasionally one longer basket
+            db.append(sorted(rng.sample(range(ni), min(3, ni))))
+    elif regime == "dup-trans":
+        distinct = [[i for i in range(ni) if rng.random() < 0.5] or [0]
+                    for _ in range(rng.randint(2, 4))]
+        db = [list(rng.choice(distinct)) for _ in range(nt)]
+    elif regime == "empty-trans":
+        dens = rng.uniform(0.15, 0.4)
+        db = [[i for i in range(ni) if rng.random() < dens]
+              for _ in range(nt)]
+        for k in rng.sample(range(len(db)), max(1, len(db) // 3)):
+            db[k] = []                   # empties stay in the DB
+    else:
+        raise ValueError(regime)
+    if not any(db):
+        db.append([0])                   # at least one item overall
+    minsup = rng.randint(1, max(1, len(db) // 2))
+    return db, minsup
+
+
+def _engines(backend: str):
+    """Every miner as ``name -> fn(db, minsup, es) -> (out, stats)``."""
+    eng = {f"oracle-{s}": (lambda s: lambda db, ms, es: mine(
+        db, ms, s, early_stop=es))(s) for s in sorted(MINERS)}
+    for s in ("eclat", "declat"):
+        eng[f"bitmap-{s}"] = (lambda s: lambda db, ms, es: mine_bitmap(
+            db, ms, scheme=s, early_stop=es, block_words=4,
+            backend=backend))(s)
+    eng["device-prepost"] = lambda db, ms, es: mine_prepost_device(
+        db, ms, early_stop=es, backend=backend)
+    return eng
+
+
+def assert_all_engines_match(db, minsup, backend="jnp"):
+    expected = mine_bruteforce(db, minsup)
+    for name, fn in _engines(backend).items():
+        for es in (False, True):
+            out, _ = fn(db, minsup, es)
+            assert out == expected, (name, es, minsup)       # I1, I2, I5
+
+
+# ---------------------------------------------------------------------------
+# deterministic regime sweeps (run without hypothesis)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_regime_sweep_all_engines_match_bruteforce(regime):
+    for seed in range(6):
+        db, minsup = gen_db(regime, seed)
+        assert_all_engines_match(db, minsup)
+
+
+def test_all_transactions_empty():
+    """A DB whose every transaction is empty has no frequent itemsets."""
+    db = [[] for _ in range(5)] + [[0]]
+    assert_all_engines_match(db, 2)
+
+
+@pytest.mark.parametrize("regime", ["dense", "powerlaw"])
+def test_pallas_backend_matches_bruteforce(regime):
+    """backend="pallas" (interpret on CPU) through the full engines."""
+    db, minsup = gen_db(regime, 0)
+    assert_all_engines_match(db, minsup, backend="pallas")
+
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_es_never_increases_comparisons_sweep(regime):
+    """I3, including the device PrePost+ path."""
+    for seed in range(4):
+        db, minsup = gen_db(regime, seed)
+        for scheme in MINERS:
+            _, full = mine(db, minsup, scheme, early_stop=False)
+            _, es = mine(db, minsup, scheme, early_stop=True)
+            assert es.comparisons <= full.comparisons, (regime, scheme)
+        _, dfull = mine_prepost_device(db, minsup, early_stop=False)
+        _, des = mine_prepost_device(db, minsup, early_stop=True)
+        assert des.comparisons <= dfull.comparisons, regime
+
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_device_prepost_counts_equal_oracle_sweep(regime):
+    """I4: same merges, same abort points, exactly the same counters."""
+    for seed in range(4):
+        db, minsup = gen_db(regime, seed)
+        for es in (False, True):
+            _, o = mine(db, minsup, "prepost", early_stop=es)
+            _, d = mine_prepost_device(db, minsup, early_stop=es)
+            assert d.comparisons == o.comparisons, (regime, seed, es)
+            assert d.es_checks == o.es_checks, (regime, seed, es)
+            assert d.es_aborts == o.es_aborts, (regime, seed, es)
+
+
+def test_block_granularity_invariance():
+    """ES block size changes WORK, never RESULTS: any block_words gives
+    the identical frequent-itemset dict (the bound is exact at every
+    granularity)."""
+    for regime in ("sparse", "powerlaw"):
+        db, minsup = gen_db(regime, 1)
+        ref = None
+        for bw in (1, 4, 16):
+            out, _ = mine_bitmap(db, minsup, "eclat", early_stop=True,
+                                 block_words=bw)
+            if ref is None:
+                ref = out
+            assert out == ref, (regime, bw)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: the same generator, fuzz-driven (CI)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def db_case(draw):
+    regime = draw(st.sampled_from(REGIMES))
+    seed = draw(st.integers(0, 2 ** 31))
+    return gen_db(regime, seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(db_case())
+def test_property_all_engines_match_bruteforce(case):
+    db, minsup = case
+    assert_all_engines_match(db, minsup)
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_case())
+def test_property_es_never_increases_comparisons(case):
+    db, minsup = case
+    for scheme in MINERS:
+        _, full = mine(db, minsup, scheme, early_stop=False)
+        _, es = mine(db, minsup, scheme, early_stop=True)
+        assert es.comparisons <= full.comparisons, scheme           # I3
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_case())
+def test_property_device_prepost_counts_equal_oracle(case):
+    db, minsup = case
+    for es in (False, True):
+        _, o = mine(db, minsup, "prepost", early_stop=es)
+        _, d = mine_prepost_device(db, minsup, early_stop=es)
+        assert d.comparisons == o.comparisons                       # I4
+        assert d.es_checks == o.es_checks
+        assert d.es_aborts == o.es_aborts

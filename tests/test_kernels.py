@@ -136,6 +136,95 @@ def test_pack_popcount_property(tids):
 
 
 # ---------------------------------------------------------------------------
+# N-list kernels (PrePost+): fused extend + standalone merge vs the ref
+# ---------------------------------------------------------------------------
+
+def _random_pool(rng, cap, offs_lens):
+    """Random PPC-code slab with ascending-pre extents at (off, len)."""
+    codes = np.stack([rng.integers(0, 1000, cap),
+                      rng.integers(0, 1000, cap),
+                      rng.integers(1, 20, cap)], axis=1).astype(np.int32)
+    for off, ln in offs_lens:
+        seg = codes[off:off + ln]
+        codes[off:off + ln] = seg[np.argsort(seg[:, 0], kind="stable")]
+    return codes
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("es", [False, True])
+@pytest.mark.parametrize("lu,lv", [(8, 8), (8, 32), (32, 8)])
+def test_nlist_extend_matches_ref(backend, es, lu, lv):
+    """ops.nlist_extend == ref.nlist_extend_ref bit-for-bit on both
+    backends: scattered child extents, lengths, supports, comparison
+    counts and aliveness (ISSUE 3 acceptance)."""
+    from repro.kernels.ref import nlist_extend_ref
+
+    rng = np.random.default_rng(7)
+    cap, n_pairs = 1024, 9
+    u_off = rng.integers(0, 256, n_pairs).astype(np.int32)
+    v_off = rng.integers(256, 512 - lv, n_pairs).astype(np.int32)
+    u_len = rng.integers(1, lu + 1, n_pairs).astype(np.int32)
+    v_len = rng.integers(1, lv + 1, n_pairs).astype(np.int32)
+    codes = _random_pool(rng, cap, list(zip(u_off, u_len))
+                         + list(zip(v_off, v_len)))
+    out_off = (512 + lu * np.arange(n_pairs)).astype(np.int32)
+    out_off[-1] = cap + 5            # OOB sentinel: must be dropped
+    rho = rng.integers(0, 120, n_pairs).astype(np.int32)
+
+    for minsup in (0, 1, 10, 80):
+        r = nlist_extend_ref(jnp.asarray(codes), u_off, u_len, v_off,
+                             v_len, out_off, rho, jnp.int32(minsup),
+                             lu=lu, lv=lv, early_stop=es)
+        g = ops.nlist_extend(jnp.asarray(codes), u_off, u_len, v_off,
+                             v_len, out_off, rho, jnp.int32(minsup),
+                             lu=lu, lv=lv, early_stop=es, backend=backend)
+        for name, a, b in zip(("codes", "child_len", "support",
+                               "comparisons", "checks", "alive"), r, g):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                backend, es, minsup, name)
+        # untouched pool rows stay untouched; OOB extents are dropped
+        new_codes = np.asarray(g[0])
+        child_len = np.asarray(g[1])
+        written = set()
+        for p in range(n_pairs - 1):
+            written.update(range(out_off[p], out_off[p] + child_len[p]))
+        untouched = [i for i in range(cap) if i not in written]
+        assert np.array_equal(new_codes[untouched], codes[untouched]), (
+            backend, es, minsup)
+
+
+@pytest.mark.parametrize("es", [False, True])
+def test_nlist_merge_pallas_matches_ref(es):
+    """Standalone padded-batch merge: pallas kernel vs the jnp ref."""
+    from repro.kernels.ref import nlist_intersect_ref
+
+    rng = np.random.default_rng(3)
+    n_pairs, lu, lv = 16, 8, 32
+
+    def mk(n, width):
+        pre = np.sort(rng.integers(0, 500, (n, width)).astype(np.int32), 1)
+        post = rng.integers(0, 500, (n, width)).astype(np.int32)
+        freq = rng.integers(1, 10, (n, width)).astype(np.int32)
+        return pre, post, freq
+
+    up, upo, uf = mk(n_pairs, lu)
+    vp, vpo, vf = mk(n_pairs, lv)
+    ul = rng.integers(1, lu + 1, n_pairs).astype(np.int32)
+    vl = rng.integers(1, lv + 1, n_pairs).astype(np.int32)
+    rho = rng.integers(0, 100, n_pairs).astype(np.int32)
+    for minsup in (0, 1, 20):
+        r = nlist_intersect_ref(up, upo, uf, vp, vpo, vf, ul, vl, rho,
+                                jnp.int32(minsup), early_stop=es)
+        p = ops.nlist_intersect(up, upo, uf, vp, vpo, vf, ul, vl, rho,
+                                jnp.int32(minsup), early_stop=es,
+                                backend="pallas")
+        for name, a, b in zip(("out_slot", "support", "cmps", "checks",
+                               "alive"), r, p):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                es, minsup, name)
+
+
+# ---------------------------------------------------------------------------
 # flash attention kernel
 # ---------------------------------------------------------------------------
 

@@ -90,9 +90,9 @@ def test_remat_does_not_change_loss():
     vals = {}
     for remat in ("none", "dots", "full"):
         c = dataclasses.replace(cfg, remat=remat)
-        (l, _), g = jax.value_and_grad(
+        (loss_v, _), g = jax.value_and_grad(
             lambda p: loss_fn(p, c, tokens, labels), has_aux=True)(params)
-        vals[remat] = (float(l), float(jnp.abs(
+        vals[remat] = (float(loss_v), float(jnp.abs(
             jax.tree.leaves(g)[0]).sum()))
     assert vals["none"] == pytest.approx(vals["dots"], rel=1e-6)
     assert vals["none"] == pytest.approx(vals["full"], rel=1e-6)

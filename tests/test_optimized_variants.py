@@ -2,7 +2,6 @@
 equivalent to their paper-faithful baselines (EXPERIMENTS.md §Perf)."""
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,145 @@
+"""Device-resident PrePost+ engine: dispatch-count and pool tests.
+
+The fused-path contract (ISSUE 3, mirroring test_fused_engine.py /
+test_distributed.py for the bitmap engines):
+
+  * ``DevicePrePost.mine`` issues exactly ONE device dispatch per pair
+    chunk (``ops.nlist_extend``) — no host-padded ``nlist_intersect``
+    call, no per-level host N-list materialisation;
+  * N-list pool growth preserves live rows bit-for-bit;
+  * extent bucketing falls back to powers of two past the largest tuned
+    bucket instead of raising.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.bitmap import nl_pad_len, NL_LEN_BUCKETS
+from repro.core.oracle import mine
+from repro.core.prepost import DevicePrePost, _pad_len, mine_prepost_device
+from repro.core.rowstore import NListPool
+from repro.kernels import ops
+
+
+def _random_db(seed, n_items=(3, 9), n_trans=(4, 30)):
+    rng = random.Random(seed)
+    ni = rng.randint(*n_items)
+    nt = rng.randint(*n_trans)
+    dens = rng.choice([0.2, 0.4, 0.6])
+    db = [[i for i in range(ni) if rng.random() < dens] for _ in range(nt)]
+    db = [t for t in db if t] or [[0]]
+    minsup = rng.randint(1, max(1, len(db) // 2))
+    return db, minsup
+
+
+def test_one_nlist_dispatch_per_pair_chunk(monkeypatch):
+    """Every pair chunk is one fused ``nlist_extend``; the legacy
+    host-padded ``nlist_intersect`` path is never called by the miner."""
+    calls = {"fused": 0}
+    real = ops.nlist_extend
+
+    def counting_fused(*a, **k):
+        calls["fused"] += 1
+        return real(*a, **k)
+
+    def forbidden(*a, **k):
+        raise AssertionError("host-padded nlist_intersect path used")
+
+    monkeypatch.setattr(ops, "nlist_extend", counting_fused)
+    monkeypatch.setattr(ops, "nlist_intersect", forbidden)
+
+    db, minsup = _random_db(3, n_items=(8, 8), n_trans=(25, 30))
+    miner = DevicePrePost(early_stop=True, pair_chunk=2)
+    out, stats = miner.mine(db, minsup)
+    assert calls["fused"] == stats.device_calls
+    # small pair_chunk forces several chunks; each was one dispatch
+    assert stats.device_calls >= 2
+    expected, _ = mine(db, minsup, "prepost", early_stop=True)
+    assert out == expected
+
+
+def test_pool_extents_recycled_end_to_end(monkeypatch):
+    """Spent rows return their extents: when the DFS finishes every
+    extent is back on the free list, and the peak live mass stays below
+    the cumulative allocation (recycling actually happened)."""
+    import repro.core.prepost as PP
+
+    created = []
+    real_pool = PP.NListPool
+
+    class CapturePool(real_pool):
+        def __init__(self, *a, **k):
+            super().__init__(*a, **k)
+            created.append(self)
+
+    monkeypatch.setattr(PP, "NListPool", CapturePool)
+    db, minsup = _random_db(5, n_items=(9, 9), n_trans=(28, 30))
+    out, stats = mine_prepost_device(db, minsup, pair_chunk=8)
+    expected, _ = mine(db, minsup, "prepost", early_stop=True)
+    assert out == expected
+    (pool,) = created
+    assert pool.live_codes == 0 and pool.n_live_rows == 0
+    assert stats.peak_codes == pool.peak_codes
+    assert pool.peak_codes < pool.total_alloc_codes
+
+
+def test_pool_growth_preserves_live_rows_bit_for_bit():
+    rng = np.random.default_rng(0)
+    pool = NListPool(capacity=64)
+    cap0 = pool.capacity
+    lens = [3, 8, 5, 1]
+    rows = pool.alloc_rows(lens)
+    arrays = [rng.integers(0, 100, (ln, 3)).astype(np.int32) for ln in lens]
+    pool.write_rows(rows, arrays)
+    before = [pool.read_row(r) for r in rows]
+    # force growth well past the current capacity
+    big = pool.alloc_rows([cap0, cap0])
+    assert pool.grows >= 1 and pool.capacity > cap0
+    for r, a, b in zip(rows, arrays, before):
+        assert np.array_equal(pool.read_row(r), a)
+        assert np.array_equal(pool.read_row(r), b)
+    pool.free_rows(big)
+
+
+def test_pool_alloc_free_reuses_extents():
+    pool = NListPool(capacity=64)
+    r1 = pool.alloc_rows([5])          # bucket 8
+    off1 = pool.offsets(r1)[0]
+    live = pool.live_codes
+    pool.free_rows(r1)
+    assert pool.live_codes == live - 8
+    r2 = pool.alloc_rows([7])          # same bucket: extent reused
+    assert pool.offsets(r2)[0] == off1
+    r3 = pool.alloc_rows([9])          # different bucket: fresh extent
+    assert pool.offsets(r3)[0] != off1
+
+
+def test_pad_len_power_of_two_fallback():
+    """Past the largest tuned bucket, sizes fall back to powers of two
+    instead of raising (the old ``_pad_len`` ValueError)."""
+    top = NL_LEN_BUCKETS[-1]
+    assert _pad_len(top) == top == nl_pad_len(top)
+    assert _pad_len(top + 1) == 2 * top
+    assert nl_pad_len(3 * top) == 4 * top
+    assert nl_pad_len(1) == NL_LEN_BUCKETS[0]
+    # the pool allocates oversized extents rather than dying
+    pool = NListPool(capacity=64)
+    rows = pool.alloc_rows([top + 1])
+    assert pool.capacity >= 2 * top
+    pool.free_rows(rows)
+
+
+@pytest.mark.parametrize("es", [False, True])
+def test_engine_matches_oracle_with_exact_counters(es):
+    """Seeded end-to-end sweep (invariant I4 without hypothesis): result
+    sets AND comparison counters equal the oracle's."""
+    for seed in range(8):
+        db, minsup = _random_db(seed)
+        o_out, o_st = mine(db, minsup, "prepost", early_stop=es)
+        d_out, d_st = mine_prepost_device(db, minsup, early_stop=es)
+        assert d_out == o_out, (seed, es)
+        assert d_st.comparisons == o_st.comparisons, (seed, es)
+        assert d_st.es_checks == o_st.es_checks, (seed, es)
+        assert d_st.es_aborts == o_st.es_aborts, (seed, es)

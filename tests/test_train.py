@@ -7,7 +7,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.train.optimizer import (OptConfig, opt_init, opt_update, lr_at,
+from repro.train.optimizer import (OptConfig, opt_init, lr_at,
                                    clip_by_global_norm, opt_state_logical)
 from repro.train.train_step import make_train_step
 from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
