@@ -124,6 +124,12 @@ def _smoke_datasets() -> Dict[str, tuple]:
     }
 
 
+# Frozen PR 3 reference: DevicePrePost issued one dispatch per class
+# member's sibling window, which cost 1021 fused calls on the longpat
+# smoke regime.  The shared frontier scheduler (ISSUE 4) must beat it.
+_PR3_LONGPAT_PREPOST_DEVICE_CALLS = 1021
+
+
 def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
     """CI benchmark smoke: the three-regime dataset matrix through both
     device engines (bitmap Eclat and PrePost+), ES vs full.
@@ -131,10 +137,14 @@ def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
     Hard-asserts the paper's headline effect where it is guaranteed
     (identical result sets everywhere; ``word_ops_saved_frac > 0`` and
     PrePost+ comparison savings on the sparse powerlaw replica; ES never
-    increases PrePost+ comparisons anywhere) and writes the stats JSON
-    so every CI run leaves a bench artifact
-    (benchmarks/check_bench_regression.py diffs it vs the committed
-    baseline).
+    increases PrePost+ comparisons anywhere) plus the ISSUE 4 frontier
+    acceptance (PrePost+ ``device_calls`` on longpat strictly below the
+    PR 3 per-member-dispatch baseline), and writes the stats JSON so
+    every CI run leaves a bench artifact — including the allocator
+    telemetry (``peak_rows`` / ``peak_codes``, ``compactions``,
+    post-compaction occupancy) that
+    benchmarks/check_bench_regression.py diffs vs the committed
+    baseline.
     """
     from repro.core.prepost import mine_prepost_device
 
@@ -176,14 +186,23 @@ def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
               f"word_ops_saved_frac={st_es.word_ops_saved_frac:.3f}, "
               f"prepost_cmp_saved={cmp_saved:.3f}, "
               f"device_calls={st_es.device_calls}+"
-              f"{st_pes.device_calls}", file=sys.stderr)
+              f"{st_pes.device_calls}, "
+              f"compactions={st_es.compactions}+{st_pes.compactions}, "
+              f"peak={st_es.peak_rows}r/{st_pes.peak_codes}c",
+              file=sys.stderr)
 
+    # Write the artifact BEFORE the acceptance asserts: when a gate
+    # trips, CI must still upload the telemetry needed to debug it.
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
     pl = report["datasets"]["powerlaw"]
     assert pl["word_ops_saved_frac"] > 0, "ES saved no word ops (powerlaw)"
     assert pl["prepost"]["comparisons_saved_frac"] > 0, (
         "ES saved no PrePost+ comparisons (powerlaw)")
-    with open(out_path, "w") as f:
-        json.dump(report, f, indent=1)
+    lp_calls = report["datasets"]["longpat"]["prepost"]["es"]["device_calls"]
+    assert lp_calls < _PR3_LONGPAT_PREPOST_DEVICE_CALLS, (
+        f"frontier batching regressed: longpat PrePost+ device_calls "
+        f"{lp_calls} >= PR 3's {_PR3_LONGPAT_PREPOST_DEVICE_CALLS}")
     print(f"smoke ok -> {out_path}", file=sys.stderr)
     return report
 

@@ -8,7 +8,11 @@ build (ROADMAP "CI trajectory" item).  Per smoke dataset:
   ``word_ops_saved_frac`` must not regress;
 * PrePost+ engine: ``comparisons`` must not increase (they are pinned
   to the oracle's exact counters — invariant I4 — so any increase is an
-  engine bug, not noise) and ``device_calls`` must not increase.
+  engine bug, not noise) and ``device_calls`` must not increase;
+* allocator memory: ``peak_rows`` (bitmap) and ``peak_codes``
+  (PrePost+) must not regress beyond ``--peak-tol`` (default 10% — the
+  build fails if the frontier/compaction layer starts holding
+  meaningfully more live mass than the committed baseline).
 
 All metrics are deterministic functions of the engines (integer math
 over seeded synthetic datasets).  A legitimate engine change that
@@ -28,7 +32,7 @@ RUNS = ("es", "full")
 
 
 def compare_dataset(name: str, current: dict, baseline: dict,
-                    word_ops_tol: float) -> list:
+                    word_ops_tol: float, peak_tol: float) -> list:
     failures = []
     for run in RUNS:
         cur, base = current[run], baseline[run]
@@ -41,6 +45,11 @@ def compare_dataset(name: str, current: dict, baseline: dict,
             failures.append(
                 f"{name}/{run}: word_ops regressed {base['word_ops']} -> "
                 f"{cur['word_ops']} (limit {limit:.0f})")
+        peak_limit = base["peak_rows"] * (1.0 + peak_tol)
+        if cur["peak_rows"] > peak_limit:
+            failures.append(
+                f"{name}/{run}: peak_rows regressed {base['peak_rows']} "
+                f"-> {cur['peak_rows']} (limit {peak_limit:.0f})")
         pcur, pbase = current["prepost"][run], baseline["prepost"][run]
         if pcur["comparisons"] > pbase["comparisons"]:
             failures.append(
@@ -50,6 +59,12 @@ def compare_dataset(name: str, current: dict, baseline: dict,
             failures.append(
                 f"{name}/{run}: prepost device_calls regressed "
                 f"{pbase['device_calls']} -> {pcur['device_calls']}")
+        peak_limit = pbase["peak_codes"] * (1.0 + peak_tol)
+        if pcur["peak_codes"] > peak_limit:
+            failures.append(
+                f"{name}/{run}: prepost peak_codes regressed "
+                f"{pbase['peak_codes']} -> {pcur['peak_codes']} "
+                f"(limit {peak_limit:.0f})")
     cur_saved = current["word_ops_saved_frac"]
     base_saved = baseline["word_ops_saved_frac"]
     if cur_saved < base_saved - word_ops_tol:
@@ -59,7 +74,8 @@ def compare_dataset(name: str, current: dict, baseline: dict,
     return failures
 
 
-def compare(current: dict, baseline: dict, word_ops_tol: float) -> list:
+def compare(current: dict, baseline: dict, word_ops_tol: float,
+            peak_tol: float) -> list:
     failures = []
     for name, base_ds in baseline["datasets"].items():
         cur_ds = current["datasets"].get(name)
@@ -67,7 +83,7 @@ def compare(current: dict, baseline: dict, word_ops_tol: float) -> list:
             failures.append(f"{name}: dataset missing from current run")
             continue
         failures.extend(
-            compare_dataset(name, cur_ds, base_ds, word_ops_tol))
+            compare_dataset(name, cur_ds, base_ds, word_ops_tol, peak_tol))
     return failures
 
 
@@ -77,13 +93,16 @@ def main() -> None:
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--word-ops-tol", type=float, default=0.02,
                     help="allowed fractional word_ops increase (default 2%%)")
+    ap.add_argument("--peak-tol", type=float, default=0.10,
+                    help="allowed fractional peak_rows / peak_codes "
+                         "increase (default 10%%)")
     args = ap.parse_args()
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
 
-    failures = compare(current, baseline, args.word_ops_tol)
+    failures = compare(current, baseline, args.word_ops_tol, args.peak_tol)
     for name, base_ds in baseline["datasets"].items():
         cur_ds = current["datasets"].get(name)
         if cur_ds is None:
@@ -91,16 +110,20 @@ def main() -> None:
         for run in RUNS:
             print(f"{name}/{run}: word_ops "
                   f"{base_ds[run]['word_ops']} -> "
-                  f"{cur_ds[run]['word_ops']}, prepost comparisons "
+                  f"{cur_ds[run]['word_ops']}, peak_rows "
+                  f"{base_ds[run]['peak_rows']} -> "
+                  f"{cur_ds[run]['peak_rows']}, prepost comparisons "
                   f"{base_ds['prepost'][run]['comparisons']} -> "
-                  f"{cur_ds['prepost'][run]['comparisons']}",
+                  f"{cur_ds['prepost'][run]['comparisons']}, peak_codes "
+                  f"{base_ds['prepost'][run]['peak_codes']} -> "
+                  f"{cur_ds['prepost'][run]['peak_codes']}",
                   file=sys.stderr)
     if failures:
         print("BENCH REGRESSION:\n  " + "\n  ".join(failures),
               file=sys.stderr)
         sys.exit(1)
-    print("bench diff ok (no word_ops/device_calls/comparisons "
-          "regression)", file=sys.stderr)
+    print("bench diff ok (no word_ops/device_calls/comparisons/"
+          "peak_rows/peak_codes regression)", file=sys.stderr)
 
 
 if __name__ == "__main__":

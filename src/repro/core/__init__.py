@@ -13,7 +13,10 @@ from repro.core.bitmap import (  # noqa: F401
     BitmapDB, pack_tidlists, unpack_row, popcount32, popcount32_np,
     suffix_popcounts, suffix_popcounts_np, DEFAULT_BLOCK_WORDS,
 )
-from repro.core.rowstore import DeviceRowStore  # noqa: F401
+from repro.core.rowstore import DeviceRowStore, NListPool  # noqa: F401
+from repro.core.frontier import (  # noqa: F401
+    ClassNode, EngineAccounting, FrontierScheduler,
+)
 from repro.core.eclat import (  # noqa: F401
     BitmapMiner, DeviceMiningStats, mine_bitmap,
 )

@@ -9,13 +9,18 @@ per-candidate count vectors, which is why the scheme scales to
 thousands of chips (Count Distribution, Agrawal & Shafer '96, adapted
 to Eclat).
 
-Early stopping distributes as the *two-level screen*: each shard
-computes its block-0 partial count plus its local suffix bound; the
-psum of per-shard bounds is a *tighter* global bound than the
-centralized one (sum of per-shard minima <= minimum of sums).  Pairs
-whose global bound misses minsup are provably infrequent and their
-classes are never expanded — the sharded instantiation of the paper's
-INTERSECT_ES.
+Early stopping distributes twice over (the sharded instantiation of
+the paper's INTERSECT_ES).  Between dispatches it is the *two-level
+screen*: each shard computes its block-0 partial count plus its local
+suffix bound; the psum of per-shard bounds is a *tighter* global bound
+than the centralized one (sum of per-shard minima <= minimum of sums),
+and pairs whose global bound misses minsup are never expanded.  Inside
+a dispatch it is *shard-local block ES* (ISSUE 4): the screen's
+per-pair slack — the mass every OTHER shard could still contribute —
+is psum'd up front, and each shard walks its local blocks against the
+conservative threshold ``minsup - slack``, aborting mid-scan the
+moment the pair is provably infrequent globally, exactly like the
+single-device blocked scan.
 
 Since ISSUE 2 the ``DistributedMiner`` is a thin subclass of
 ``core.eclat.BitmapMiner``: both engines share one allocator
@@ -173,8 +178,10 @@ def make_mining_round_v2(mesh: Mesh, *, pair_chunk: int = 2048):
 class DistributedMiner(BitmapMiner):
     """Count-distribution Eclat over a device mesh.
 
-    The host/DFS split, frontier batching, free-list bookkeeping and
-    stats all come from ``BitmapMiner``; this class only swaps in
+    The host/DFS split, drain-group batching, free-list bookkeeping,
+    allocator compaction scheduling and stats all come from
+    ``BitmapMiner`` driving ``core.frontier.FrontierScheduler``; this
+    class only swaps in
 
       * a block-sharded ``DeviceRowStore`` (slab + per-shard suffix
         tables under ``NamedSharding``s, growing on demand), and
@@ -193,16 +200,19 @@ class DistributedMiner(BitmapMiner):
                  pair_axis: str = None,
                  early_stop: bool = True,
                  capacity: int = 4096, pair_chunk: int = 4096,
-                 block_words: int = DEFAULT_BLOCK_WORDS):
+                 block_words: int = DEFAULT_BLOCK_WORDS,
+                 compact_occupancy: float = 0.25):
         super().__init__(scheme="eclat", early_stop=early_stop,
                          block_words=block_words, pair_chunk=pair_chunk,
-                         backend="jnp")
+                         backend="jnp",
+                         compact_occupancy=compact_occupancy)
         del pair_axis
         self.mesh = mesh
         self.tid_axes = tuple(tid_axes) if tid_axes else tuple(mesh.axis_names)
         self.capacity = capacity
         self._fused = ops.make_screen_and_intersect_sharded(
-            mesh, tid_axes=self.tid_axes, mode="and")
+            mesh, tid_axes=self.tid_axes, mode="and",
+            early_stop=early_stop)
 
     def _make_store(self, bdb: BitmapDB) -> DeviceRowStore:
         return DeviceRowStore(
@@ -223,25 +233,34 @@ class DistributedMiner(BitmapMiner):
                 "DistributedMiner is eclat-only (mode='and')")
         n = int(ua.size)
         cap = store.capacity
-        store.rows, store.suffix, bound, count = self._fused(
+        (store.rows, store.suffix, bound, count, blocks,
+         scan_alive) = self._fused(
             store.rows, store.suffix,
             _bucket_pad(ua, n), _bucket_pad(vb, n),
             _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped
-            _bucket_pad(rho, n))
+            _bucket_pad(rho, n), np.int32(self._minsup))
         stats.device_calls += 1
         bound = np.asarray(bound[:n])
         count = np.asarray(count[:n])
-        # Every shard walks all of its local blocks: the single fused
-        # dispatch computes the exact count unconditionally, so here the
-        # screen bound costs ~nothing extra (block-0 popcounts are reused
-        # from the count) but also saves no in-dispatch work — word_ops
-        # == word_ops_full and ``screened_out`` is attribution, not a
-        # savings counter.  Distributing the screen's per-pair slack as a
-        # shard-local block-ES threshold is the ROADMAP follow-up.
-        stats.word_ops += n * self._n_blocks * self.block_words
+        blocks = np.asarray(blocks[:n])
+        scan_alive = np.asarray(scan_alive[:n])
+        # In-dispatch shard-local block ES (ISSUE 4): each shard walks its
+        # local blocks against the conservative threshold
+        # ``minsup - slack`` (slack = the screen mass every OTHER shard
+        # could still contribute) and aborts mid-scan once the pair is
+        # provably infrequent globally.  ``blocks`` is the psum of local
+        # blocks actually scanned, so word_ops now measures real savings
+        # like the single-device path.
+        stats.word_ops += int(blocks.sum()) * self.block_words
         if self.early_stop:
-            alive = bound >= self._minsup
-            stats.screened_out += int((~alive).sum())
+            screen_alive = bound >= self._minsup
+            alive = np.logical_and(screen_alive, scan_alive)
+            # Attribution: the psum'd two-level screen claims its deaths
+            # first; pairs it passed but a shard's scan aborted are
+            # in-dispatch kernel aborts.
+            stats.screened_out += int((~screen_alive).sum())
+            stats.kernel_aborts += int(
+                np.logical_and(screen_alive, ~scan_alive).sum())
         else:
             alive = np.ones(n, bool)
         return count, alive

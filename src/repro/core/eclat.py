@@ -24,26 +24,36 @@ each chunk is exactly **one** device dispatch
 Slots are allocated pessimistically (one per candidate pair) before the
 dispatch and the dead ones are returned to the free list right after —
 free-list traffic is pure host bookkeeping, so infrequent candidates
-still cost zero extra device work.
+still cost zero extra device work.  When occupancy drops far enough the
+scheduler compacts the slab at a drain-group boundary
+(``DeviceRowStore.compact_if_sparse``) and remaps the frontier's slot
+handles through the returned mapping.
 
 Work metric: ``word_ops`` — uint32 word operations actually performed
 (blocks_done x block_words per pair; the fused screen is block 0 of the
 same scan).  This is the device analogue of the paper's #comparisons and
 is what benchmarks/bench_paper.py reports next to the oracle's exact
 counter.
+
+The traversal policy (work stack, cross-class drain-group batching,
+chunk slicing, operand free-listing, compaction scheduling) lives in
+``core.frontier.FrontierScheduler`` — this module only implements the
+scheduler's client protocol on top of the fused bitmap dispatch.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, Hashable, List, Sequence, Tuple
+from typing import Any, Dict, FrozenSet, Hashable, List, Sequence, Tuple
 
 import numpy as np
 
 import jax.numpy as jnp
 
 from repro.core.bitmap import BitmapDB, DEFAULT_BLOCK_WORDS, bucket_pad
+from repro.core.frontier import (Child, ClassNode, EngineAccounting,
+                                 FrontierScheduler)
 from repro.core.rowstore import DeviceRowStore
 from repro.kernels import ops
 
@@ -53,20 +63,28 @@ _PAIR_BUCKETS = (64, 256, 1024, 4096, 16384, 65536, 262144)
 
 
 @dataclass
-class DeviceMiningStats:
+class DeviceMiningStats(EngineAccounting):
     """Work accounting for the bitmap engine (device analogue of
-    ``oracle.MiningStats``)."""
+    ``oracle.MiningStats``; the shared device/allocator counters come
+    from ``frontier.EngineAccounting``)."""
 
-    candidates: int = 0
-    nodes: int = 0
     screened_out: int = 0        # pairs killed by the one-block screen
     kernel_aborts: int = 0       # pairs killed past block 0
     word_ops: int = 0            # uint32 ops actually performed
     word_ops_full: int = 0       # what a non-ES engine would have performed
-    device_calls: int = 0
-    store_grows: int = 0         # row-store slab reallocations
-    peak_rows: int = 0           # peak live rows in the store
-    runtime_s: float = 0.0
+
+    # Legacy names kept as read-only views of the shared accounting.
+    @property
+    def store_grows(self) -> int:
+        return self.grows
+
+    @property
+    def peak_rows(self) -> int:
+        return self.peak_live
+
+    @property
+    def deaths(self) -> int:
+        return self.screened_out + self.kernel_aborts
 
     @property
     def ratio(self) -> float:
@@ -88,10 +106,10 @@ class DeviceMiningStats:
             "word_ops": self.word_ops,
             "word_ops_full": self.word_ops_full,
             "word_ops_saved_frac": round(self.word_ops_saved_frac, 4),
-            "device_calls": self.device_calls,
             "store_grows": self.store_grows,
             "peak_rows": self.peak_rows,
             "runtime_s": round(self.runtime_s, 6),
+            **self.accounting_dict(),
         }
 
 
@@ -99,27 +117,23 @@ def _bucket_pad(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
     return bucket_pad(arr, n, _PAIR_BUCKETS, fill)
 
 
-@dataclass
-class _Class:
-    """One equivalence class: members share a prefix (Eclat) and are kept
-    in search order.  ``row_ids`` are slots in the device row store
-    holding TID bitmaps (Eclat, dEclat level 1) or diffsets (dEclat
-    level >= 2) — contents never leave the device."""
-
-    itemsets: List[Tuple[Hashable, ...]]
-    row_ids: np.ndarray       # int32 (m,) store slots
-    supports: np.ndarray      # int32 (m,)
-    is_tidlist: bool
-
-
 class BitmapMiner:
     """Eclat / dEclat over a device-resident row store with fused
-    screen+intersect early stopping."""
+    screen+intersect early stopping.
+
+    The DFS itself is ``core.frontier.FrontierScheduler`` — this class is
+    its client: it turns one class's sibling-pair triangle into store
+    slot columns, evaluates a pair-chunk slice as ONE fused device
+    dispatch, and recycles spent slots.  ``compact_occupancy`` is the
+    allocator memory-tuning knob: when live rows fall below that
+    fraction of the slab (and the slab would at least halve), the
+    scheduler compacts it between drain groups; 0 disables compaction.
+    """
 
     def __init__(self, scheme: str = "eclat", early_stop: bool = True,
                  block_words: int = DEFAULT_BLOCK_WORDS,
                  pair_chunk: int = 65536, backend: str = "auto",
-                 metrics: bool = True):
+                 metrics: bool = True, compact_occupancy: float = 0.25):
         if scheme not in ("eclat", "declat"):
             raise ValueError(f"bad scheme {scheme!r}")
         self.scheme = scheme
@@ -127,6 +141,7 @@ class BitmapMiner:
         self.block_words = block_words
         self.pair_chunk = min(pair_chunk, _PAIR_BUCKETS[-1])
         self.backend = backend
+        self.compact_occupancy = compact_occupancy
         # The fused dispatch returns exact blocks_done/word_ops for free;
         # ``metrics`` is kept for API compatibility and no longer selects
         # a separate (two-dispatch) fast path.
@@ -146,16 +161,18 @@ class BitmapMiner:
             stats.nodes += 1
 
         store = self._make_store(bdb)
-        root = _Class(
+        root = ClassNode(
             itemsets=[(it,) for it in bdb.items],
-            row_ids=np.arange(bdb.n_items, dtype=np.int32),
+            rows=np.arange(bdb.n_items, dtype=np.int32),
             supports=bdb.supports.astype(np.int32),
-            is_tidlist=True)
+            payload=True)                  # payload: is_tidlist
         self._minsup = minsup
         self._n_blocks = store.n_blocks   # padded under a sharded store
-        self._traverse(store, root, out, stats)
-        stats.store_grows = store.grows
-        stats.peak_rows = store.peak_live
+        self._store = store
+        self._out = out
+        self._stats = stats
+        FrontierScheduler(self, self.pair_chunk).run(root)
+        stats.note_allocator(store)
         stats.runtime_s = time.perf_counter() - t0
         return out, stats
 
@@ -166,97 +183,30 @@ class BitmapMiner:
             bdb.bitmaps,
             capacity=bdb.n_items + min(self.pair_chunk, 4096))
 
-    # -- frontier-batched expansion -----------------------------------------
-    #
-    # A work stack of pending classes is drained in groups: pairs from as
-    # many classes as fit in one ``pair_chunk`` are concatenated into a
-    # single device call.  This keeps batches large even deep in the DFS
-    # where individual classes are tiny — on a real TPU this is what
-    # amortises launch latency; on CPU it is the difference between
-    # dispatch-bound and compute-bound mining.  Result sets are order-
-    # independent, so draining order does not affect correctness.
-    #
-    # Row lifetime: a class's member rows are operands only for that
-    # class's own pair batch, so they are free-listed as soon as the drain
-    # group that consumed them completes; child slots live until the child
-    # class is drained in turn.
+    # -- FrontierScheduler client protocol ----------------------------------
 
-    def _traverse(self, store: DeviceRowStore, root: _Class,
-                  out: ItemsetSupports, stats: DeviceMiningStats) -> None:
-        stack: List[_Class] = [root]
-        while stack:
-            # -- drain classes until one pair_chunk is filled --------------
-            drained: List[_Class] = []
-            total = 0
-            while stack and total < self.pair_chunk:
-                klass = stack.pop()
-                m = len(klass.itemsets)
-                if m < 2:
-                    store.free(klass.row_ids)      # leaf: rows are done
-                    continue
-                drained.append(klass)
-                total += m * (m - 1) // 2
-            if not drained:
-                continue
+    def pair_columns(self, klass: ClassNode, ia: np.ndarray,
+                     ib: np.ndarray) -> Dict[str, np.ndarray]:
+        # Operand orientation (paper Alg. 1/2):
+        #   eclat:             Z = T(Px) & T(Py)
+        #   declat level 2:    D(xy)  = T(x)  & ~T(y)  (U=x,  V=y)
+        #   declat level >=3:  D(Pxy) = D(Py) & ~D(Px) (U=Py, V=Px)
+        if self.scheme == "eclat" or klass.payload:
+            ua, vb = ia, ib
+        else:
+            ua, vb = ib, ia
+        return {"ua": klass.rows[ua].astype(np.int32),
+                "vb": klass.rows[vb].astype(np.int32),
+                "rho": klass.supports[ia].astype(np.int32)}
 
-            # -- merge all pairs into global slot-index arrays --------------
-            ua_l, vb_l, rho_l, meta = [], [], [], []
-            for ci, klass in enumerate(drained):
-                m = len(klass.itemsets)
-                ia, ib = np.triu_indices(m, 1)
-                # Operand orientation (paper Alg. 1/2):
-                #   eclat:             Z = T(Px) & T(Py)
-                #   declat level 2:    D(xy)  = T(x)  & ~T(y)  (U=x,  V=y)
-                #   declat level >=3:  D(Pxy) = D(Py) & ~D(Px) (U=Py, V=Px)
-                if self.scheme == "eclat" or klass.is_tidlist:
-                    ua, vb = ia, ib
-                else:
-                    ua, vb = ib, ia
-                ua_l.append(klass.row_ids[ua])
-                vb_l.append(klass.row_ids[vb])
-                rho_l.append(klass.supports[ia])
-                meta.extend((ci, int(a), int(b)) for a, b in zip(ia, ib))
-            ua_g = np.concatenate(ua_l).astype(np.int32)
-            vb_g = np.concatenate(vb_l).astype(np.int32)
-            rho_g = np.concatenate(rho_l).astype(np.int32)
+    def evaluate_pairs(self, cols: Dict[str, np.ndarray],
+                       ) -> List[Tuple[int, int, int, Any]]:
+        """One pair-chunk slice -> ONE fused device dispatch.
 
-            # -- chunked device evaluation: ONE dispatch per chunk ---------
-            pend: List[Tuple[int, int, int, int, Tuple]] = []
-            groups: Dict[Tuple[int, int], List[int]] = {}
-            for lo in range(0, ua_g.size, self.pair_chunk):
-                sl = slice(lo, lo + self.pair_chunk)
-                slots_f, sup_f, kept = self._eval_pairs(
-                    store, ua_g[sl], vb_g[sl], rho_g[sl], stats)
-                for slot, s, ki in zip(slots_f, sup_f, kept):
-                    ci, a, b = meta[lo + ki]
-                    klass = drained[ci]
-                    cs = klass.itemsets[a] + (klass.itemsets[b][-1],)
-                    out[frozenset(cs)] = s
-                    stats.nodes += 1
-                    groups.setdefault((ci, a), []).append(len(pend))
-                    pend.append((ci, a, slot, s, cs))
-
-            # -- form child classes and push --------------------------------
-            for _key, idxs in groups.items():
-                stack.append(_Class(
-                    itemsets=[pend[i][4] for i in idxs],
-                    row_ids=np.asarray([pend[i][2] for i in idxs], np.int32),
-                    supports=np.asarray([pend[i][3] for i in idxs],
-                                        np.int32),
-                    is_tidlist=False))
-
-            # -- parent rows are spent operands: recycle their slots --------
-            for klass in drained:
-                store.free(klass.row_ids)
-
-    def _eval_pairs(self, store: DeviceRowStore, ua: np.ndarray,
-                    vb: np.ndarray, rho: np.ndarray,
-                    stats: DeviceMiningStats,
-                    ) -> Tuple[np.ndarray, List[int], List[int]]:
-        """Evaluate one pair chunk in a single fused device dispatch.
-
-        Returns (slots, supports, kept): store slots and supports of the
-        frequent children, plus their chunk-local pair indices."""
+        Returns the frequent children as ``(ki, slot, support, None)``
+        tuples (``ki`` = chunk-local pair index)."""
+        store, stats = self._store, self._stats
+        ua, vb, rho = cols["ua"], cols["vb"], cols["rho"]
         n = int(ua.size)
         stats.candidates += n
         stats.word_ops_full += n * self._n_blocks * self.block_words
@@ -274,9 +224,31 @@ class BitmapMiner:
 
         kept_idx = np.nonzero(freq)[0]
         store.free(slots[~freq])                  # dead children: recycle
-        return (slots[kept_idx],
-                [int(s) for s in support[kept_idx]],
-                [int(i) for i in kept_idx])
+        return [(int(ki), int(slots[ki]), int(support[ki]), None)
+                for ki in kept_idx]
+
+    def make_class(self, parent: ClassNode,
+                   children: List[Child]) -> ClassNode:
+        del parent
+        return ClassNode(
+            itemsets=[c.itemset for c in children],
+            rows=np.asarray([c.row for c in children], np.int32),
+            supports=np.asarray([c.support for c in children], np.int32),
+            payload=False)                 # children are never tidlists
+
+    def emit(self, itemset: Tuple[Hashable, ...], support: int) -> None:
+        self._out[frozenset(itemset)] = support
+        self._stats.nodes += 1
+
+    def release(self, klass: ClassNode) -> None:
+        self._store.free(klass.rows)
+
+    def maybe_compact(self, reserve: int) -> "np.ndarray | None":
+        """Drain-group boundary hook: compact the slab when occupancy
+        warrants it.  Returns the slot mapping for the scheduler to
+        remap every live frontier handle (or None)."""
+        return self._store.compact_if_sparse(
+            self.compact_occupancy, reserve=reserve, backend=self.backend)
 
     def _dispatch(self, store: DeviceRowStore, ua: np.ndarray,
                   vb: np.ndarray, slots: np.ndarray, rho: np.ndarray,

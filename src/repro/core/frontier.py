@@ -1,0 +1,216 @@
+"""Engine-agnostic DFS frontier scheduler (ISSUE 4 tentpole).
+
+The paper's early-stopping trick only pays off when support checks are
+issued in large device batches: deep in the DFS individual equivalence
+classes are tiny, so an engine that dispatches per class (or per class
+member) is launch-latency-bound long before it is compute-bound.  The
+cross-class *drain-group* batching that fixes this used to live inside
+``core.eclat.BitmapMiner`` only; this module extracts the whole
+traversal policy — work stack, drain grouping, pair-triangle assembly,
+chunk slicing, operand free-listing and compaction scheduling — into
+one scheduler that all three engines drive:
+
+* ``core.eclat.BitmapMiner``            (bitmap rows, fused screen+ES)
+* ``core.distributed.DistributedMiner`` (block-sharded rows, shard_map)
+* ``core.prepost.DevicePrePost``        (N-list extents, fused merge)
+
+The engine ("client") owns the *device* side: how a pair chunk becomes
+operand index columns, what the one fused dispatch per chunk is, and
+how surviving children are materialised.  The scheduler owns the *host*
+side: which classes are drained together so batches stay full, when
+spent operand rows go back to the allocator, and when the allocator is
+compacted (a drain-group boundary is the only point where every live
+row is reachable from the frontier, so handle remapping is sound).
+
+Client protocol (duck-typed; the miners implement it directly):
+
+``pair_columns(klass, ia, ib) -> Dict[str, np.ndarray]``
+    Per-pair operand columns for one class's sibling-pair triangle.
+``evaluate_pairs(cols) -> Iterable[(ki, row, support, extra)]``
+    ONE fused device dispatch for a <= pair_chunk column slice; yields
+    the surviving children by chunk-local pair index.
+``make_class(parent, children) -> ClassNode``
+    Wrap surviving children of one (class, member) group as a new class.
+``emit(itemset, support)``          record one frequent itemset.
+``release(klass)``                  free a class's operand rows.
+``maybe_compact(reserve) -> Optional[np.ndarray]``
+    Compact the allocator if occupancy warrants it; return an old->new
+    row-id mapping when handles moved (``None`` when ids are stable).
+
+Work accounting for every engine flows through one shared struct
+(:class:`EngineAccounting`): ``device_calls``, ES deaths, allocator
+grows/compactions and peak live mass mean the same thing in every
+engine's stats dict and in ``benchmarks/bench_paper.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import (Any, Dict, Hashable, List, NamedTuple, Optional,
+                    Tuple)
+
+import numpy as np
+
+
+@dataclass
+class EngineAccounting:
+    """Shared device-engine accounting (one struct for all three engines).
+
+    ``peak_live`` is the allocator's peak live mass — bitmap rows for the
+    row-store engines, PPC-code triples for the N-list engine.
+    ``compaction_occupancy`` is ``live / capacity`` right after the most
+    recent compaction epoch (0.0 when compaction never fired)."""
+
+    candidates: int = 0
+    nodes: int = 0
+    device_calls: int = 0
+    grows: int = 0               # allocator slab reallocations
+    compactions: int = 0         # allocator compaction epochs
+    peak_live: int = 0           # peak live allocator mass
+    compaction_occupancy: float = 0.0
+    runtime_s: float = 0.0
+
+    @property
+    def deaths(self) -> int:
+        """Candidates certified infrequent by ES (engine-specific split
+        lives in the subclasses)."""
+        return 0
+
+    def note_allocator(self, alloc) -> None:
+        """Pull the shared allocator counters (rowstore / nlist pool)."""
+        self.grows = alloc.grows
+        self.compactions = alloc.compactions
+        self.peak_live = alloc.peak_live
+        self.compaction_occupancy = alloc.last_compaction_occupancy
+
+    def accounting_dict(self) -> Dict[str, float]:
+        return {
+            "device_calls": self.device_calls,
+            "deaths": self.deaths,
+            "compactions": self.compactions,
+            "compaction_occupancy": round(self.compaction_occupancy, 4),
+        }
+
+
+@dataclass
+class ClassNode:
+    """One equivalence class on the frontier.
+
+    ``rows`` are allocator handles (row-store slots or N-list pool row
+    ids) — contents never leave the device.  ``payload`` carries the
+    engine-specific extras (bitmap: the is-tidlist flag; N-list: the
+    per-member exact lengths)."""
+
+    itemsets: List[Tuple[Hashable, ...]]
+    rows: np.ndarray          # int32 (m,)
+    supports: np.ndarray      # int32 (m,)
+    payload: Any = None
+
+
+class Child(NamedTuple):
+    """One surviving candidate, as returned through ``evaluate_pairs``."""
+
+    itemset: Tuple[Hashable, ...]
+    row: int
+    support: int
+    extra: Any
+
+
+class FrontierScheduler:
+    """Shared DFS work-stack with cross-class drain-group batching.
+
+    Classes are drained from the stack until one ``pair_chunk`` worth of
+    sibling pairs is collected, their pair triangles are concatenated
+    into global operand columns, and each ``pair_chunk`` slice goes to
+    the client as exactly one fused device dispatch.  Result sets are
+    order-independent, so draining order never affects correctness.
+
+    Row lifetime: a class's member rows are operands only for its own
+    pair triangle, so they are released as soon as the drain group that
+    consumed them completes; child rows live until the child class is
+    drained in turn.  Compaction runs at drain-group boundaries, where
+    the stack plus the drained group is exactly the live row set — the
+    scheduler remaps every frontier handle through the mapping the
+    allocator returns.
+    """
+
+    def __init__(self, client, pair_chunk: int):
+        self.client = client
+        self.pair_chunk = int(pair_chunk)
+        self._stack: List[ClassNode] = []
+
+    # -- frontier bookkeeping ------------------------------------------------
+
+    def push(self, klass: ClassNode) -> None:
+        self._stack.append(klass)
+
+    def drain_group(self) -> Tuple[List[ClassNode], int]:
+        """Pop classes until one pair_chunk of pairs is filled.  Leaf
+        classes (< 2 members) release their rows and contribute none."""
+        drained: List[ClassNode] = []
+        total = 0
+        while self._stack and total < self.pair_chunk:
+            klass = self._stack.pop()
+            m = len(klass.itemsets)
+            if m < 2:
+                self.client.release(klass)
+                continue
+            drained.append(klass)
+            total += m * (m - 1) // 2
+        return drained, total
+
+    def remap(self, mapping: np.ndarray,
+              drained: Optional[List[ClassNode]] = None) -> None:
+        """Apply an allocator old->new row-id mapping to every live
+        frontier handle (stack + the in-flight drain group)."""
+        for klass in self._stack:
+            klass.rows = mapping[klass.rows]
+        for klass in drained or ():
+            klass.rows = mapping[klass.rows]
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, root: ClassNode) -> None:
+        self.push(root)
+        while self._stack:
+            drained, total = self.drain_group()
+            if not drained:
+                continue
+            mapping = self.client.maybe_compact(
+                min(total, self.pair_chunk))
+            if mapping is not None:
+                self.remap(mapping, drained)
+
+            cols, meta = self._assemble(drained)
+            groups: Dict[Tuple[int, int], List[Child]] = {}
+            for lo in range(0, total, self.pair_chunk):
+                sl = slice(lo, lo + self.pair_chunk)
+                chunk = {k: v[sl] for k, v in cols.items()}
+                for ki, row, support, extra in self.client.evaluate_pairs(
+                        chunk):
+                    ci, a, b = meta[lo + ki]
+                    klass = drained[ci]
+                    itemset = klass.itemsets[a] + (klass.itemsets[b][-1],)
+                    self.client.emit(itemset, support)
+                    groups.setdefault((ci, a), []).append(
+                        Child(itemset, row, support, extra))
+            for (ci, _a), kids in groups.items():
+                self.push(self.client.make_class(drained[ci], kids))
+            for klass in drained:
+                self.client.release(klass)
+
+    def _assemble(self, drained: List[ClassNode],
+                  ) -> Tuple[Dict[str, np.ndarray],
+                             List[Tuple[int, int, int]]]:
+        """Concatenate every drained class's sibling-pair triangle into
+        global operand columns plus (class, a, b) metadata."""
+        cols_l: Dict[str, List[np.ndarray]] = {}
+        meta: List[Tuple[int, int, int]] = []
+        for ci, klass in enumerate(drained):
+            m = len(klass.itemsets)
+            ia, ib = np.triu_indices(m, 1)
+            for key, col in self.client.pair_columns(klass, ia, ib).items():
+                cols_l.setdefault(key, []).append(np.asarray(col))
+            meta.extend((ci, int(a), int(b)) for a, b in zip(ia, ib))
+        cols = {k: np.concatenate(v) for k, v in cols_l.items()}
+        return cols, meta

@@ -25,17 +25,26 @@ Comparison counts reported by the device path are exactly the oracle's
 ("jnp", the CPU production path) or the Pallas kernel
 (``kernels/nlist_merge.py``, "pallas"/"auto"-on-TPU), both bit-exact vs
 ``kernels.ref.nlist_extend_ref``.
+
+Since ISSUE 4 the DFS is the shared ``core.frontier.FrontierScheduler``
+(the same cross-class drain-group batching as the bitmap engines), so
+deep DFS regions no longer dispatch per class member, and the pool is
+compacted/re-bucketed at drain-group boundaries.  Comparison counts are
+batching-invariant (each pair's merge is independent), so they remain
+exactly the oracle's (I4).
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, Hashable, List, Sequence, Tuple
+from typing import Any, Dict, FrozenSet, Hashable, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.oracle import PPCTree, MiningStats
+from repro.core.frontier import (Child, ClassNode, EngineAccounting,
+                                 FrontierScheduler)
 from repro.core.rowstore import NListPool
 from repro.core.bitmap import bucket_pad, nl_pad_len
 from repro.kernels import ops
@@ -52,42 +61,51 @@ def _pad_len(n: int) -> int:
 
 
 @dataclass
-class DevicePrePostStats(MiningStats):
-    """Oracle-compatible counters plus device-engine accounting."""
+class DevicePrePostStats(MiningStats, EngineAccounting):
+    """Oracle-compatible counters plus the shared device-engine
+    accounting struct (``frontier.EngineAccounting``)."""
 
-    device_calls: int = 0      # fused nlist_extend dispatches
-    pool_grows: int = 0        # code-slab reallocations
-    peak_codes: int = 0        # peak live pool extent mass (code triples)
+    # Legacy names kept as read-only views of the shared accounting.
+    @property
+    def pool_grows(self) -> int:
+        return self.grows
+
+    @property
+    def peak_codes(self) -> int:
+        return self.peak_live
+
+    @property
+    def deaths(self) -> int:
+        return self.es_aborts
 
     def as_dict(self) -> Dict[str, float]:
         d = super().as_dict()
-        d.update(device_calls=self.device_calls,
-                 pool_grows=self.pool_grows, peak_codes=self.peak_codes)
+        d.update(pool_grows=self.pool_grows, peak_codes=self.peak_codes,
+                 **self.accounting_dict())
         return d
-
-
-@dataclass
-class _Member:
-    """One equivalence-class member: the host handle to a pooled N-list.
-
-    ``row`` is an ``NListPool`` row id — code contents never leave the
-    device."""
-
-    itemset: Tuple[Hashable, ...]
-    row: int
-    length: int
-    support: int
 
 
 class DevicePrePost:
     """PrePost+ over a device-resident N-list pool with one fused
-    gather→merge→Z-merge→scatter dispatch per pair chunk."""
+    gather→merge→Z-merge→scatter dispatch per pair chunk.
+
+    The DFS is ``core.frontier.FrontierScheduler`` — the same work-stack
+    + cross-class drain-group batching as the bitmap engines, so deep
+    DFS regions no longer issue one dispatch per class member's sibling
+    window: pairs from MANY classes (with heterogeneous U operands —
+    ``nlist_extend`` takes per-pair extents) fill each chunk.
+    ``compact_occupancy``: see ``BitmapMiner`` — for the pool, a
+    compaction epoch also shrinks every extent to the bucket of its
+    actual length, undoing the pessimistic ``min(|U|, |V|)`` child
+    allocation; 0 disables.
+    """
 
     def __init__(self, early_stop: bool = True, pair_chunk: int = 8192,
-                 backend: str = "auto"):
+                 backend: str = "auto", compact_occupancy: float = 0.25):
         self.early_stop = early_stop
         self.pair_chunk = min(pair_chunk, _PAIR_BUCKETS[-1])
         self.backend = backend
+        self.compact_occupancy = compact_occupancy
 
     def mine(self, db: Sequence[Sequence[Hashable]], minsup: int,
              ) -> Tuple[ItemsetSupports, DevicePrePostStats]:
@@ -110,57 +128,55 @@ class DevicePrePost:
         rows = pool.alloc_rows([len(a) for a in arrays])
         if len(arrays):
             pool.write_rows(rows, arrays)
-        members = [
-            _Member(itemset=(it,), row=int(r), length=len(a),
-                    support=tree.item_support[it])
-            for it, r, a in zip(order_asc, rows, arrays)]
+        root = ClassNode(
+            itemsets=[(it,) for it in order_asc],
+            rows=np.asarray(rows, np.int32),
+            supports=np.asarray([tree.item_support[it] for it in order_asc],
+                                np.int32),
+            payload=np.asarray([len(a) for a in arrays], np.int32))
 
         self._minsup = minsup
-        self._traverse(pool, members, out, stats)
-        stats.pool_grows = pool.grows
-        stats.peak_codes = pool.peak_codes
+        self._pool = pool
+        self._out = out
+        self._stats = stats
+        FrontierScheduler(self, self.pair_chunk).run(root)
+        stats.note_allocator(pool)
         stats.runtime_s = time.perf_counter() - t0
         return out, stats
 
-    def _traverse(self, pool: NListPool, klass: List[_Member],
-                  out: ItemsetSupports, stats: DevicePrePostStats) -> None:
-        for a in range(len(klass)):
-            siblings = klass[a + 1:]
-            if not siblings:
-                pool.free_rows([klass[a].row])  # served as V only: spent
-                continue
-            children: List[_Member] = []
-            for lo in range(0, len(siblings), self.pair_chunk):
-                children.extend(self._extend_chunk(
-                    pool, klass[a], siblings[lo:lo + self.pair_chunk],
-                    stats))
-            # klass[a] is U here and V only for earlier members: spent.
-            pool.free_rows([klass[a].row])
-            for ch in children:
-                out[frozenset(ch.itemset)] = ch.support
-                stats.nodes += 1
-            if children:
-                self._traverse(pool, children, out, stats)
+    # -- FrontierScheduler client protocol ----------------------------------
 
-    def _extend_chunk(self, pool: NListPool, xs: _Member,
-                      chunk: List[_Member],
-                      stats: DevicePrePostStats) -> List[_Member]:
-        n = len(chunk)
+    def pair_columns(self, klass: ClassNode, ia: np.ndarray,
+                     ib: np.ndarray) -> Dict[str, np.ndarray]:
+        lens = klass.payload               # per-member exact N-list lengths
+        return {"u_row": klass.rows[ia].astype(np.int32),
+                "v_row": klass.rows[ib].astype(np.int32),
+                "u_len": lens[ia].astype(np.int32),
+                "v_len": lens[ib].astype(np.int32),
+                "rho_v": klass.supports[ib].astype(np.int32)}
+
+    def evaluate_pairs(self, cols: Dict[str, np.ndarray],
+                       ) -> List[Tuple[int, int, int, Any]]:
+        """One pair-chunk slice -> ONE fused ``nlist_extend`` dispatch.
+
+        Returns the frequent children as ``(ki, row, support, length)``
+        tuples.  Operand U/V extents vary per pair (cross-class chunk):
+        the gather widths are the buckets of the chunk maxima."""
+        pool, stats = self._pool, self._stats
+        u_len, v_len = cols["u_len"], cols["v_len"]
+        n = int(u_len.size)
         stats.candidates += n
-        lu = nl_pad_len(xs.length)
-        v_len = pool.lengths([s.row for s in chunk])
+        lu = nl_pad_len(int(u_len.max()))
         lv = nl_pad_len(int(v_len.max()))
 
         # Pessimistic child extents: |child| <= min(|U|, |V|); extents of
         # dead candidates are recycled right after the dispatch, so
-        # infrequent pairs cost free-list bookkeeping only.
-        child_rows = pool.alloc_rows(np.minimum(xs.length, v_len))
-
-        u_off = np.full((n,), pool.offsets([xs.row])[0], np.int32)
-        u_len = np.full((n,), xs.length, np.int32)
-        v_off = pool.offsets([s.row for s in chunk])
+        # infrequent pairs cost free-list bookkeeping only.  Offsets are
+        # resolved AFTER the allocation (it may grow the slab).
+        child_rows = pool.alloc_rows(np.minimum(u_len, v_len))
+        u_off = pool.offsets(cols["u_row"])
+        v_off = pool.offsets(cols["v_row"])
         out_off = pool.offsets(child_rows)
-        rho_v = np.asarray([s.support for s in chunk], np.int32)
 
         def pad(arr, fill=0):
             return bucket_pad(arr, n, _PAIR_BUCKETS, fill)
@@ -168,7 +184,7 @@ class DevicePrePost:
          alive) = ops.nlist_extend(
             pool.codes, pad(u_off), pad(u_len), pad(v_off), pad(v_len),
             pad(out_off, fill=pool.capacity),   # OOB pad -> dropped
-            pad(rho_v), np.int32(self._minsup),
+            pad(cols["rho_v"]), np.int32(self._minsup),
             lu=lu, lv=lv, early_stop=self.early_stop, backend=self.backend)
         stats.device_calls += 1
         child_len = np.asarray(child_len[:n])
@@ -183,14 +199,47 @@ class DevicePrePost:
 
         freq = support >= self._minsup   # aborted pairs report support 0
         pool.free_rows(child_rows[~freq])
-        children: List[_Member] = []
+        results: List[Tuple[int, int, int, Any]] = []
         for b in np.nonzero(freq)[0]:
             pool.set_length(child_rows[b], child_len[b])
-            children.append(_Member(
-                itemset=xs.itemset + (chunk[b].itemset[-1],),
-                row=int(child_rows[b]), length=int(child_len[b]),
-                support=int(support[b])))
-        return children
+            results.append((int(b), int(child_rows[b]), int(support[b]),
+                            int(child_len[b])))
+        return results
+
+    def make_class(self, parent: ClassNode,
+                   children: List[Child]) -> ClassNode:
+        del parent
+        return ClassNode(
+            itemsets=[c.itemset for c in children],
+            rows=np.asarray([c.row for c in children], np.int32),
+            supports=np.asarray([c.support for c in children], np.int32),
+            payload=np.asarray([c.extra for c in children], np.int32))
+
+    def emit(self, itemset: Tuple[Hashable, ...], support: int) -> None:
+        self._out[frozenset(itemset)] = support
+        self._stats.nodes += 1
+
+    def release(self, klass: ClassNode) -> None:
+        self._pool.free_rows(klass.rows)
+
+    def maybe_compact(self, reserve: int) -> None:
+        """Drain-group boundary hook.  Pool row ids are stable across
+        compaction (offsets are indirected through the host tables), so
+        the scheduler never needs to remap — always returns None.
+
+        ``reserve`` arrives as a pair count; the next drain group
+        allocates one pessimistic child extent per pair, each bounded by
+        its parents, so the mean live extent size converts it into code
+        triples.  Without this headroom a compaction would shrink to
+        tight mass and the very next chunk would regrow the slab
+        (compact/grow thrash); the would-halve hysteresis absorbs the
+        estimate's error."""
+        pool = self._pool
+        avg_extent = pool.live_codes // max(pool.n_live_rows, 1)
+        pool.compact_if_sparse(self.compact_occupancy,
+                               reserve=reserve * max(avg_extent, 1),
+                               backend=self.backend)
+        return None
 
 
 def mine_prepost_device(db, minsup, early_stop: bool = True, **kw):

@@ -28,6 +28,20 @@ Growth doubles capacity (device concat of a zero slab, re-placed under
 the store's sharding).  Capacities are rounded to the next power of two
 so the jit cache sees few distinct store shapes.  Exhaustion can no
 longer happen: ``alloc`` grows instead of raising.
+
+Compaction (ISSUE 4) is the inverse of growth: when occupancy drops
+below a threshold, ``compact`` gathers the live rows / extents to the
+front of a smaller slab in one fused device dispatch
+(``kernels.ops.compact_rows`` / ``compact_codes``, pinned bit-exact by
+``kernels.ref.compact_gather_ref``, Pallas variant available) and hands
+the freed capacity back.  Row-store compaction *renumbers* slots and
+returns an old->new mapping the frontier scheduler applies to every
+live handle; N-list pool compaction keeps row ids stable (offsets are
+indirected through the host tables) and additionally shrinks each
+extent to the bucket of its *actual* length, undoing the pessimistic
+``min(|U|, |V|)`` allocation.  Both engines trigger compaction only at
+drain-group boundaries (``core.frontier``), the one point where the
+live row set is exactly the frontier.
 """
 
 from __future__ import annotations
@@ -40,7 +54,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.bitmap import nl_pad_len, popcount32_np, suffix_popcounts
+from repro.core.bitmap import (NL_LEN_BUCKETS, nl_pad_len, popcount32_np,
+                               suffix_popcounts)
 
 
 def _round_capacity(n: int) -> int:
@@ -48,6 +63,22 @@ def _round_capacity(n: int) -> int:
     while cap < n:
         cap *= 2
     return cap
+
+
+def _largest_bucket_le(n: int) -> int:
+    """Largest N-list bucket size <= ``n`` (``n`` >= the smallest bucket).
+
+    Every bucket is a multiple of the smallest one, so splitting a free
+    extent greedily with this always decomposes the tail exactly."""
+    best = NL_LEN_BUCKETS[0]
+    for b in NL_LEN_BUCKETS:
+        if b <= n:
+            best = b
+    b = NL_LEN_BUCKETS[-1]
+    while b * 2 <= n:                 # power-of-two fallback region
+        b *= 2
+        best = b
+    return best
 
 
 def _local_suffix_tables(rows_np: np.ndarray, n_shards: int) -> np.ndarray:
@@ -111,6 +142,8 @@ class DeviceRowStore:
                 self._suffix_sharding)
         self._free: List[int] = list(range(cap - 1, n - 1, -1))
         self.grows = 0
+        self.compactions = 0
+        self.last_compaction_occupancy = 0.0
         self.peak_live = n
 
     @property
@@ -120,6 +153,10 @@ class DeviceRowStore:
     @property
     def n_live(self) -> int:
         return self.capacity - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_live / max(self.capacity, 1)
 
     def alloc(self, k: int) -> np.ndarray:
         """Pop ``k`` free slots (int32), growing the slab if needed."""
@@ -152,6 +189,61 @@ class DeviceRowStore:
         self._free.extend(range(new - 1, old - 1, -1))
         self.grows += 1
 
+    def compact(self, *, reserve: int = 0, backend: str = "jnp",
+                ) -> np.ndarray:
+        """Defragment: gather live rows to the front of a (usually
+        smaller) slab in one fused device dispatch.
+
+        Live rows keep their relative order and are preserved bit-for-bit
+        (rows AND suffix tables); the slab shrinks to
+        ``_round_capacity(n_live + reserve)`` and, under a mesh, is
+        re-placed under the store's ``NamedSharding`` — this is what lets
+        long sharded runs *shrink* again after a growth spike.
+
+        Returns the old->new slot mapping ``int32[old_capacity]`` (-1 for
+        slots that were free): callers MUST remap every live handle.
+        """
+        from repro.kernels import ops
+
+        old_cap = self.capacity
+        free_mask = np.zeros(old_cap, bool)
+        free_mask[np.asarray(self._free, np.int64)] = True
+        live = np.nonzero(~free_mask)[0].astype(np.int32)
+        n_live = int(live.size)
+        new_cap = _round_capacity(max(n_live + reserve, 1))
+
+        perm = np.full(new_cap, -1, np.int32)       # dest slot -> src slot
+        perm[:n_live] = live
+        rows, suffix = ops.compact_rows(self.rows, self.suffix, perm,
+                                        backend=backend)
+        if self._rows_sharding is not None:
+            rows = jax.device_put(rows, self._rows_sharding)
+            suffix = jax.device_put(suffix, self._suffix_sharding)
+        self.rows = rows
+        self.suffix = suffix
+        self._free = list(range(new_cap - 1, n_live - 1, -1))
+        self.compactions += 1
+        self.last_compaction_occupancy = n_live / max(new_cap, 1)
+
+        mapping = np.full(old_cap, -1, np.int32)
+        mapping[live] = np.arange(n_live, dtype=np.int32)
+        return mapping
+
+    def compact_if_sparse(self, occupancy_threshold: float, *,
+                          reserve: int = 0, backend: str = "jnp",
+                          ) -> Optional[np.ndarray]:
+        """Compact when occupancy fell below ``occupancy_threshold`` AND
+        the slab would shrink to at most half its size (hysteresis: a
+        compaction that the next drain group would immediately regrow is
+        worse than useless).  Returns the slot mapping, or ``None``."""
+        if occupancy_threshold <= 0.0:
+            return None
+        new_cap = _round_capacity(max(self.n_live + reserve, 1))
+        if (self.occupancy < occupancy_threshold
+                and new_cap <= self.capacity // 2):
+            return self.compact(reserve=reserve, backend=backend)
+        return None
+
 
 class NListPool:
     """Device-resident ragged pool of PPC codes (the PrePost+ analogue of
@@ -177,6 +269,8 @@ class NListPool:
         self._free: Dict[int, List[int]] = {}   # bucket size -> extent offs
         self._bump = 0                          # slab high-water mark
         self.grows = 0
+        self.compactions = 0
+        self.last_compaction_occupancy = 0.0
         self._row_off: List[int] = []
         self._row_len: List[int] = []           # actual (exact) lengths
         self._row_cap: List[int] = []           # bucketed extent sizes
@@ -193,10 +287,38 @@ class NListPool:
     def n_live_rows(self) -> int:
         return len(self._row_off) - len(self._free_rows)
 
+    @property
+    def occupancy(self) -> float:
+        return self.live_codes / max(self.capacity, 1)
+
+    @property
+    def peak_live(self) -> int:
+        """Uniform allocator-accounting alias (``EngineAccounting``)."""
+        return self.peak_codes
+
     def _alloc_extent(self, bucket: int) -> int:
         stack = self._free.get(bucket)
         if stack:
             return stack.pop()
+        # No exact-size extent: recycle a LARGER free extent by splitting
+        # it — head becomes the requested bucket, the tail is released
+        # back to smaller bucket free lists (greedy largest-bucket-first
+        # decomposition; every bucket size is a multiple of the smallest,
+        # so the tail always decomposes exactly).  Without this, capacity
+        # freed in big buckets — e.g. the pessimistic extents a
+        # compaction epoch shrinks away — could never serve the small
+        # allocations that dominate deep in the DFS, and the slab leaked.
+        bigger = sorted(b for b, s in self._free.items() if b > bucket and s)
+        if bigger:
+            src = bigger[0]                  # smallest sufficient extent
+            off = self._free[src].pop()
+            tail_off, rem = off + bucket, src - bucket
+            while rem > 0:
+                piece = _largest_bucket_le(rem)
+                self._free.setdefault(piece, []).append(tail_off)
+                tail_off += piece
+                rem -= piece
+            return off
         off = self._bump
         if off + bucket > self.capacity:
             self._grow(off + bucket)
@@ -269,3 +391,69 @@ class NListPool:
         self.codes = jnp.concatenate(
             [self.codes, jnp.zeros((new - old, 3), jnp.int32)])
         self.grows += 1
+
+    def _tight_mass(self) -> int:
+        """Total bucketed mass after shrinking every live extent to the
+        bucket of its actual length (what a compaction would leave)."""
+        free_rows = set(self._free_rows)
+        return sum(nl_pad_len(max(self._row_len[r], 1))
+                   for r in range(len(self._row_off))
+                   if r not in free_rows)
+
+    def compact(self, *, reserve: int = 0, backend: str = "jnp") -> None:
+        """Repack live extents to the front of a (usually smaller) slab
+        in one fused device dispatch, shrinking each extent to the bucket
+        of its *actual* length — this undoes the pessimistic
+        ``min(|U|, |V|)`` child allocation for long-lived classes.
+
+        Live code triples are preserved bit-for-bit and row ids stay
+        stable (callers hold row ids, not offsets, so no remap is
+        needed).  Free lists and the bump pointer are rebuilt from
+        scratch: everything past the packed region is virgin capacity.
+        """
+        from repro.kernels import ops
+
+        free_rows = set(self._free_rows)
+        live = sorted((r for r in range(len(self._row_off))
+                       if r not in free_rows),
+                      key=lambda r: self._row_off[r])
+        idx_parts: List[np.ndarray] = []
+        bump = 0
+        new_off: List[Tuple[int, int, int]] = []    # (row, off, bucket)
+        for r in live:
+            ln = self._row_len[r]
+            bucket = nl_pad_len(max(ln, 1))
+            idx = np.full(bucket, -1, np.int32)
+            idx[:ln] = np.arange(self._row_off[r], self._row_off[r] + ln,
+                                 dtype=np.int32)
+            idx_parts.append(idx)
+            new_off.append((r, bump, bucket))
+            bump += bucket
+        new_cap = _round_capacity(max(bump + reserve, 1))
+        perm = np.full(new_cap, -1, np.int32)
+        if bump:
+            perm[:bump] = np.concatenate(idx_parts)
+        self.codes = ops.compact_codes(self.codes, perm, backend=backend)
+        for r, off, bucket in new_off:
+            self._row_off[r] = off
+            self._row_cap[r] = bucket
+        self._bump = bump
+        self._free = {}
+        self.live_codes = bump
+        self.compactions += 1
+        self.last_compaction_occupancy = bump / max(new_cap, 1)
+
+    def compact_if_sparse(self, occupancy_threshold: float, *,
+                          reserve: int = 0, backend: str = "jnp") -> bool:
+        """Compact when occupancy fell below ``occupancy_threshold`` AND
+        the slab would shrink to at most half its size (same hysteresis
+        as ``DeviceRowStore.compact_if_sparse``)."""
+        if occupancy_threshold <= 0.0:
+            return False
+        if self.occupancy >= occupancy_threshold:
+            return False
+        new_cap = _round_capacity(max(self._tight_mass() + reserve, 1))
+        if new_cap > self.capacity // 2:
+            return False
+        self.compact(reserve=reserve, backend=backend)
+        return True

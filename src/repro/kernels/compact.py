@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: allocator compaction gather (ISSUE 4).
+
+Both device allocators (``core.rowstore.DeviceRowStore`` and
+``core.rowstore.NListPool``) defragment by gathering their live rows /
+extents to the front of a smaller slab.  The destination side is
+contiguous, so the whole compaction is ONE gather indexed by a
+host-built ``perm`` vector: ``out[i] = slab[perm[i]]`` (``perm[i] < 0``
+means destination slot ``i`` comes up zeroed/free).
+
+Grid/layout
+-----------
+grid = (new_capacity,) — one program per destination row.  ``perm`` is a
+scalar-prefetch operand (``PrefetchScalarGridSpec``), so the input
+BlockSpec's index_map can steer the DMA: program ``i`` pulls source row
+``clip(perm[i], 0, cap-1)`` into VMEM and writes it to destination row
+``i``, masking to zeros when ``perm[i] < 0``.  One row is
+``slab.shape[1:]`` — ``(n_blocks, block_words)`` uint32 for bitmap rows,
+``(n_shards*(nb_local+1),)`` int32 for suffix tables, ``(3,)`` int32 for
+PPC-code triples — small enough that a row is always far under VMEM.
+
+Semantics are defined by ``kernels/ref.py::compact_gather_ref`` and must
+match it bit-for-bit (tests/test_kernels.py sweeps slab ranks, dtypes
+and dead-slot patterns).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(perm_ref, slab_ref, out_ref):
+    i = pl.program_id(0)
+    live = perm_ref[i] >= 0
+    blk = slab_ref[...]
+    out_ref[...] = jnp.where(live, blk, jnp.zeros_like(blk))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compact_gather(slab: jnp.ndarray, perm: jnp.ndarray, *,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Pallas compaction gather: ``out[i] = slab[perm[i]]`` or zeros.
+
+    ``slab`` is any (capacity, ...) device slab; ``perm int32
+    (new_capacity,)`` maps destination to source rows (-1 = zero fill).
+    ``interpret=True`` (the CPU default) runs the kernel body in the
+    Pallas interpreter for validation; on TPU pass ``interpret=False``.
+    """
+    cap = slab.shape[0]
+    n_out = perm.shape[0]
+    trailing = slab.shape[1:]
+    rank = len(trailing)
+    zeros = (0,) * rank
+
+    def in_map(i, perm_ref):
+        return (jnp.clip(perm_ref[i], 0, cap - 1),) + zeros
+
+    def out_map(i, perm_ref):
+        del perm_ref
+        return (i,) + zeros
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_out,),
+        in_specs=[pl.BlockSpec((1,) + trailing, in_map)],
+        out_specs=pl.BlockSpec((1,) + trailing, out_map),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out,) + trailing, slab.dtype),
+        interpret=interpret,
+    )(jnp.asarray(perm, jnp.int32), slab)

@@ -109,25 +109,31 @@ def screen_and_intersect(rows, suffix, ua, vb, slots, rho_parent, minsup,
 @functools.lru_cache(maxsize=None)
 def make_screen_and_intersect_sharded(mesh: Mesh,
                                       tid_axes: Tuple[str, ...] = (),
-                                      mode: str = "and"):
-    """Build the fused sharded dispatch for ``mesh`` (ISSUE 2 tentpole).
+                                      mode: str = "and",
+                                      early_stop: bool = True):
+    """Build the fused sharded dispatch for ``mesh`` (ISSUE 2 tentpole;
+    shard-local in-dispatch block ES added by ISSUE 4).
 
     Returns a jitted shard_map program
-    ``fused(rows, suffix, ua, vb, slots, rho_parent) ->
-    (rows, suffix, bound, count)`` that is bit-exact against
-    ``ref.screen_and_intersect_sharded_ref`` with ``n_shards`` = the
-    product of ``tid_axes`` sizes.  Layouts (``DeviceRowStore`` sharded
-    mode): ``rows uint32 (cap, nb, bw)`` block-sharded over ``tid_axes``;
-    ``suffix int32 (cap, n_shards*(nb_local+1))`` column-sharded so each
-    shard owns its local suffix table; pair index/rho vectors replicated.
+    ``fused(rows, suffix, ua, vb, slots, rho_parent, minsup) ->
+    (rows, suffix, bound, count, blocks, alive)`` that is bit-exact
+    against ``ref.screen_and_intersect_sharded_ref`` with ``n_shards`` =
+    the product of ``tid_axes`` sizes.  Layouts (``DeviceRowStore``
+    sharded mode): ``rows uint32 (cap, nb, bw)`` block-sharded over
+    ``tid_axes``; ``suffix int32 (cap, n_shards*(nb_local+1))``
+    column-sharded so each shard owns its local suffix table; pair
+    index/rho vectors replicated.
 
-    One dispatch per pair chunk replaces the legacy three round programs
-    (screen / count / materialize — 3 dispatches + 2 collectives): it
-    gathers operands from the block-sharded slab, computes the per-shard
-    block-0 screen bound + local suffix mass and the per-shard partial
-    popcount, psums the two ``int32[n_pairs]`` vectors, and scatters
-    child rows + suffix columns shard-locally (one collective total).
-    ``rows``/``suffix`` are DONATED: callers must replace their handles.
+    One dispatch per pair chunk: gather operands from the block-sharded
+    slab, psum the screen's per-pair slack (mode "and" with ES: one
+    small ``int32[n_pairs]`` collective), walk the local blocks with the
+    shared blocked-ES scan against the conservative shard-local
+    threshold ``minsup - slack`` (each shard aborts mid-scan exactly
+    like the single-device path once it has *proven* the pair globally
+    infrequent — see the ref docstring for the bound), then one fused
+    psum of the per-shard ``(count, blocks, dead, screen-bound)``
+    vectors and a shard-local child scatter.  ``rows``/``suffix`` are
+    DONATED: callers must replace their handles.
     """
     if mode not in ("and", "andnot"):
         raise ValueError(f"bad mode {mode!r}")
@@ -137,41 +143,106 @@ def make_screen_and_intersect_sharded(mesh: Mesh,
     suffix_spec = P(None, tid_spec)
     vec = P(None)
 
-    def fused(rows, suffix, ua, vb, slots, rho_parent):
+    def fused(rows, suffix, ua, vb, slots, rho_parent, minsup):
         # Local shapes: rows (cap, nb_local, bw), suffix (cap, nb_local+1).
+        n = ua.shape[0]
         U = jnp.take(rows, ua, axis=0)
         V = jnp.take(rows, vb, axis=0)
-        Z = U & (V if mode == "and" else ~V)
-        zpc = _popcount32(Z).sum(axis=-1)            # (n, nb_local)
-        count = jax.lax.psum(zpc.sum(axis=-1), tid_axes)
+        su = jnp.take(suffix, ua, axis=0)
+        sv = jnp.take(suffix, vb, axis=0)
+        rho = rho_parent.astype(jnp.int32)
+        minsup = jnp.asarray(minsup, jnp.int32)
+
+        if not early_stop:
+            thr = jnp.full((n,), jnp.iinfo(jnp.int32).min, jnp.int32)
+        elif mode == "and":
+            m = jnp.minimum(su[:, 0], sv[:, 0])     # local achievable mass
+            slack = jax.lax.psum(m, tid_axes) - m   # every OTHER shard's
+            thr = minsup - slack
+        else:
+            thr = jnp.broadcast_to(minsup, (n,))
+
+        Z, cnt, blocks, alive = _ref._blocked_es_scan(
+            U, V, su, sv, rho, thr, mode=mode)
+        zpc = _popcount32(Z).sum(axis=-1)           # (n, nb_local)
         c0 = zpc[:, 0]
         if mode == "and":
-            su1 = jnp.take(suffix, ua, axis=0)[:, 1]
-            sv1 = jnp.take(suffix, vb, axis=0)[:, 1]
-            bound = jax.lax.psum(c0 + jnp.minimum(su1, sv1), tid_axes)
+            bound_c = c0 + jnp.minimum(su[:, 1], sv[:, 1])
         else:
-            bound = rho_parent.astype(jnp.int32) - jax.lax.psum(c0, tid_axes)
+            bound_c = c0
+        count, blocks, dead, bound = jax.lax.psum(
+            (cnt, blocks, (~alive).astype(jnp.int32), bound_c), tid_axes)
+        if mode == "andnot":
+            bound = rho - bound
+        alive_g = dead == 0
+
         child_suffix = jnp.concatenate(
             [jnp.cumsum(zpc[:, ::-1], axis=-1)[:, ::-1],
              jnp.zeros((zpc.shape[0], 1), jnp.int32)], axis=-1)
         rows = rows.at[slots].set(Z, mode="drop")
         suffix = suffix.at[slots].set(child_suffix, mode="drop")
-        return rows, suffix, bound, count
+        return rows, suffix, bound, count, blocks, alive_g
 
     mapped = _shard_map(
         fused, mesh=mesh,
-        in_specs=(rows_spec, suffix_spec, vec, vec, vec, vec),
-        out_specs=(rows_spec, suffix_spec, vec, vec),
+        in_specs=(rows_spec, suffix_spec, vec, vec, vec, vec, P()),
+        out_specs=(rows_spec, suffix_spec, vec, vec, vec, vec),
         check_rep=False)
     jitted = jax.jit(mapped, donate_argnums=(0, 1))
 
-    def dispatch(rows, suffix, ua, vb, slots, rho_parent):
+    def dispatch(rows, suffix, ua, vb, slots, rho_parent, minsup):
         return jitted(rows, suffix,
                       jnp.asarray(ua, jnp.int32), jnp.asarray(vb, jnp.int32),
                       jnp.asarray(slots, jnp.int32),
-                      jnp.asarray(rho_parent, jnp.int32))
+                      jnp.asarray(rho_parent, jnp.int32),
+                      jnp.asarray(minsup, jnp.int32))
 
     return dispatch
+
+
+# No buffer donation here: compaction's whole point is that the output
+# slab has a DIFFERENT (smaller) shape, so the input could never be
+# reused in place anyway.
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _compact_rows_impl(rows, suffix, perm, *, backend):
+    if backend == "pallas":
+        from .compact import compact_gather as _pg
+        interp = not _on_tpu()
+        return (_pg(rows, perm, interpret=interp),
+                _pg(suffix, perm, interpret=interp))
+    return (_ref.compact_gather_ref(rows, perm),
+            _ref.compact_gather_ref(suffix, perm))
+
+
+def compact_rows(rows, suffix, perm, *, backend: str = "auto",
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-store compaction: gather live rows + suffix tables to the
+    front of a fresh (usually smaller) slab in ONE fused device dispatch.
+
+    ``perm int32 (new_capacity,)`` maps destination slots to source
+    slots; negative entries come up zeroed (free slots).  Bit-exact vs
+    ``ref.compact_gather_ref`` on both backends.  ``rows``/``suffix``
+    are replaced wholesale: callers must swap in the returned slabs."""
+    b = _resolve(backend)
+    return _compact_rows_impl(rows, suffix, jnp.asarray(perm, jnp.int32),
+                              backend=b)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _compact_codes_impl(codes, perm, *, backend):
+    if backend == "pallas":
+        from .compact import compact_gather as _pg
+        return _pg(codes, perm, interpret=not _on_tpu())
+    return _ref.compact_gather_ref(codes, perm)
+
+
+def compact_codes(codes, perm, *, backend: str = "auto") -> jnp.ndarray:
+    """N-list pool compaction: repack live extents to the front of a
+    fresh slab in ONE fused device dispatch (``perm`` carries the
+    per-code source index; -1 = zero fill)."""
+    b = _resolve(backend)
+    return _compact_codes_impl(codes, jnp.asarray(perm, jnp.int32),
+                               backend=b)
 
 
 def bitmap_intersect_full(U, V, *, mode: str = "and",

@@ -34,22 +34,21 @@ from repro.core.bitmap import popcount32, NL_SENTINEL as _NL
 #   * minsup <= 0 disables early stopping (the non-ES baselines).
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def bitmap_intersect_es_ref(
-    U: jnp.ndarray,            # uint32 (n_pairs, n_blocks, bw)
-    V: jnp.ndarray,            # uint32 (n_pairs, n_blocks, bw)
-    suffix_u: jnp.ndarray,     # int32  (n_pairs, n_blocks + 1)
-    suffix_v: jnp.ndarray,     # int32  (n_pairs, n_blocks + 1)
-    rho_parent: jnp.ndarray,   # int32  (n_pairs,)  (used by "andnot")
-    minsup: jnp.ndarray,       # int32  scalar
-    *,
-    mode: str = "and",
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (Z, counts, blocks_done, alive_final)."""
+def _blocked_es_scan(U, V, suffix_u, suffix_v, rho_parent, thr, *,
+                     mode: str):
+    """Shared blocked-ES scan with a PER-PAIR threshold vector.
+
+    ``thr int32 (n_pairs,)``: a pair dies when its running bound drops
+    below its own threshold.  The single-device path passes the
+    broadcast scalar minsup; the sharded path passes the conservative
+    shard-local threshold ``minsup - slack`` derived from the screen's
+    per-pair slack (see ``screen_and_intersect_sharded_ref``).  A
+    threshold of INT32_MIN never kills (bounds are >= 0): that is the
+    ES-disabled path.  Returns ``(Z, counts, blocks_done, alive)``."""
     if mode not in ("and", "andnot"):
         raise ValueError(f"bad mode {mode!r}")
-    n_pairs, n_blocks, _ = U.shape
-    minsup = jnp.asarray(minsup, jnp.int32)
+    n_pairs = U.shape[0]
+    thr = jnp.asarray(thr, jnp.int32)
 
     u_t = jnp.swapaxes(U, 0, 1)                     # (nb, n_pairs, bw)
     v_t = jnp.swapaxes(V, 0, 1)
@@ -67,7 +66,7 @@ def bitmap_intersect_es_ref(
             bound = cnt_new + jnp.minimum(su_k, sv_k)
         else:
             bound = rho_parent.astype(jnp.int32) - cnt_new
-        alive_new = jnp.logical_and(alive, bound >= minsup)
+        alive_new = jnp.logical_and(alive, bound >= thr)
         z_out = jnp.where(alive[:, None], z_k, jnp.uint32(0))
         return (cnt_new, alive_new, blocks), z_out
 
@@ -78,6 +77,24 @@ def bitmap_intersect_es_ref(
         step, init, (u_t, v_t, su_next, sv_next))
     Z = jnp.swapaxes(z_stack, 0, 1)
     return Z, cnt, blocks, alive
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def bitmap_intersect_es_ref(
+    U: jnp.ndarray,            # uint32 (n_pairs, n_blocks, bw)
+    V: jnp.ndarray,            # uint32 (n_pairs, n_blocks, bw)
+    suffix_u: jnp.ndarray,     # int32  (n_pairs, n_blocks + 1)
+    suffix_v: jnp.ndarray,     # int32  (n_pairs, n_blocks + 1)
+    rho_parent: jnp.ndarray,   # int32  (n_pairs,)  (used by "andnot")
+    minsup: jnp.ndarray,       # int32  scalar
+    *,
+    mode: str = "and",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (Z, counts, blocks_done, alive_final)."""
+    n_pairs = U.shape[0]
+    thr = jnp.broadcast_to(jnp.asarray(minsup, jnp.int32), (n_pairs,))
+    return _blocked_es_scan(U, V, suffix_u, suffix_v, rho_parent, thr,
+                            mode=mode)
 
 
 @functools.partial(jax.jit, static_argnames=("mode",))
@@ -112,7 +129,8 @@ def screen_and_intersect_ref(
                                    mode=mode)
 
 
-@functools.partial(jax.jit, static_argnames=("n_shards", "mode"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_shards", "mode", "early_stop"))
 def screen_and_intersect_sharded_ref(
     rows: jnp.ndarray,         # uint32 (capacity, n_blocks, bw) row store
     suffix: jnp.ndarray,       # int32  (capacity, n_shards*(nb_local+1))
@@ -120,11 +138,15 @@ def screen_and_intersect_sharded_ref(
     vb: jnp.ndarray,           # int32  (n_pairs,)  V operand row indices
     slots: jnp.ndarray,        # int32  (n_pairs,)  child dest rows (OOB drop)
     rho_parent: jnp.ndarray,   # int32  (n_pairs,)  parent support ("andnot")
+    minsup: jnp.ndarray,       # int32  scalar (in-dispatch ES threshold)
     *,
     n_shards: int,
     mode: str = "and",
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Oracle for the sharded fused dispatch (ISSUE 2 unification).
+    early_stop: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray, jnp.ndarray]:
+    """Oracle for the sharded fused dispatch (ISSUE 2 unification,
+    in-dispatch block ES added by ISSUE 4).
 
     Pins the exact semantics ``ops.make_screen_and_intersect_sharded``
     must reproduce bit-for-bit when the block axis of ``rows`` is sharded
@@ -134,8 +156,8 @@ def screen_and_intersect_sharded_ref(
     ``[s*(nbl+1), (s+1)*(nbl+1))`` — ``DeviceRowStore``'s sharded
     layout).  One dispatch per pair chunk computes, per pair:
 
-    * ``count`` — the exact global support contribution
-      (``psum`` of per-shard popcounts of ``Z = U op V``);
+    * ``count`` — the psum of per-shard popcounts of ``Z = U op V``
+      (the exact global support whenever the pair stayed alive);
     * ``bound`` — the *two-level distributed screen*: each shard refines
       with its own block 0, so the global bound is the psum of per-shard
       one-block bounds — mode "and":
@@ -143,32 +165,66 @@ def screen_and_intersect_sharded_ref(
       (sum of per-shard minima <= minimum of sums: tighter than the
       centralized screen), mode "andnot": ``rho_parent - sum_s |U0_s &
       ~V0_s|``;
+    * **shard-local block ES** (``early_stop=True``): each shard walks
+      its local blocks with the shared blocked-ES scan, but against the
+      conservative threshold ``thr_s = minsup - slack_s`` where
+      ``slack_s = sum_{s' != s} min(sufU_s'[0], sufV_s'[0])`` is the
+      screen's per-pair slack — the mass every OTHER shard could still
+      contribute.  A shard whose local bound drops below ``thr_s`` has
+      *proven* the pair globally infrequent and stops scanning
+      mid-dispatch (the sharded instantiation of the paper's
+      INTERSECT_ES); its count freezes and the blocks past the abort
+      point scatter as zeros.  For "andnot" the local bound
+      ``rho_parent - cnt_s`` already dominates the global support, so
+      ``thr_s = minsup`` with no slack term.
 
     and scatters the child rows plus their per-shard suffix tables into
     the store at ``slots`` (slots ``>= capacity`` are dropped — pair
-    padding / discarded children).  A pair whose ``bound`` misses minsup
-    is provably infrequent; the host never materialises its class.
+    padding / discarded children).  A pair whose ``bound`` misses
+    minsup, or that any shard aborted, is provably infrequent; the host
+    never materialises its class.
 
-    Returns ``(rows, suffix, bound, count)``.
+    Returns ``(rows, suffix, bound, count, blocks, alive)`` where
+    ``blocks`` is the total local blocks actually scanned across shards
+    (the distributed word-op numerator) and ``alive`` is True iff every
+    shard finished its scan alive.
     """
     if mode not in ("and", "andnot"):
         raise ValueError(f"bad mode {mode!r}")
     n_pairs = ua.shape[0]
     cap, nb, bw = rows.shape
     nbl = nb // n_shards
+    minsup = jnp.asarray(minsup, jnp.int32)
 
     U = jnp.take(rows, ua, axis=0).reshape(n_pairs, n_shards, nbl, bw)
     V = jnp.take(rows, vb, axis=0).reshape(n_pairs, n_shards, nbl, bw)
-    Z = U & (V if mode == "and" else ~V)
+    su = jnp.take(suffix, ua, axis=0).reshape(n_pairs, n_shards, nbl + 1)
+    sv = jnp.take(suffix, vb, axis=0).reshape(n_pairs, n_shards, nbl + 1)
+
+    if not early_stop:
+        thr = jnp.full((n_pairs, n_shards), jnp.iinfo(jnp.int32).min,
+                       jnp.int32)
+    elif mode == "and":
+        m = jnp.minimum(su[:, :, 0], sv[:, :, 0])      # (n, S) local mass
+        slack = m.sum(axis=1, keepdims=True) - m       # psum(m) - m
+        thr = minsup - slack
+    else:
+        thr = jnp.broadcast_to(minsup, (n_pairs, n_shards))
+
+    flat = (n_pairs * n_shards,)
+    Zf, cnt_f, blocks_f, alive_f = _blocked_es_scan(
+        U.reshape(flat + (nbl, bw)), V.reshape(flat + (nbl, bw)),
+        su.reshape(flat + (nbl + 1,)), sv.reshape(flat + (nbl + 1,)),
+        jnp.repeat(rho_parent.astype(jnp.int32), n_shards),
+        thr.reshape(flat), mode=mode)
+    Z = Zf.reshape(n_pairs, n_shards, nbl, bw)
     zpc = popcount32(Z).sum(axis=-1)                # (n, S, nbl)
-    count = zpc.sum(axis=(1, 2))
+    count = cnt_f.reshape(n_pairs, n_shards).sum(axis=1)
+    blocks = blocks_f.reshape(n_pairs, n_shards).sum(axis=1)
+    alive = alive_f.reshape(n_pairs, n_shards).all(axis=1)
     c0 = zpc[:, :, 0]                               # (n, S) per-shard block 0
     if mode == "and":
-        su1 = jnp.take(suffix, ua, axis=0).reshape(
-            n_pairs, n_shards, nbl + 1)[:, :, 1]
-        sv1 = jnp.take(suffix, vb, axis=0).reshape(
-            n_pairs, n_shards, nbl + 1)[:, :, 1]
-        bound = (c0 + jnp.minimum(su1, sv1)).sum(axis=1)
+        bound = (c0 + jnp.minimum(su[:, :, 1], sv[:, :, 1])).sum(axis=1)
     else:
         bound = rho_parent.astype(jnp.int32) - c0.sum(axis=1)
 
@@ -178,7 +234,7 @@ def screen_and_intersect_sharded_ref(
         axis=-1).reshape(n_pairs, n_shards * (nbl + 1))
     rows = rows.at[slots].set(Z.reshape(n_pairs, nb, bw), mode="drop")
     suffix = suffix.at[slots].set(child_suffix, mode="drop")
-    return rows, suffix, bound, count
+    return rows, suffix, bound, count, blocks, alive
 
 
 @jax.jit
@@ -227,6 +283,28 @@ def screen_pairs_ref(first_u: jnp.ndarray, first_v: jnp.ndarray,
     else:
         raise ValueError(f"bad mode {mode!r}")
     return bound, bound >= jnp.asarray(minsup, jnp.int32)
+
+
+@jax.jit
+def compact_gather_ref(slab: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
+    """Allocator compaction gather: ``new[i] = slab[perm[i]]`` for
+    ``0 <= perm[i] < capacity``, zeros elsewhere.
+
+    ``perm int32 (new_capacity,)`` maps each *destination* slot to its
+    source slot (-1 marks slots that come up free/zeroed).  Because the
+    destination side is contiguous, the scatter half of the
+    gather-scatter is the identity — one fused gather IS the whole
+    compaction dispatch.  Works for any leading-axis slab: bitmap rows
+    ``uint32 (cap, nb, bw)``, suffix tables ``int32 (cap, S)``, N-list
+    code slabs ``int32 (cap, 3)``.  The OOB handling is spelled out
+    (clip + mask) rather than relying on ``jnp.take`` fill-mode
+    semantics so the result is identical across JAX versions."""
+    cap = slab.shape[0]
+    idx = jnp.clip(perm, 0, cap - 1)
+    g = jnp.take(slab, idx, axis=0)
+    ok = jnp.logical_and(perm >= 0, perm < cap)
+    ok = ok.reshape((perm.shape[0],) + (1,) * (slab.ndim - 1))
+    return jnp.where(ok, g, jnp.zeros((), slab.dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -138,10 +138,11 @@ def _random_db(seed, n_items=(4, 9), n_trans=(10, 60)):
     return db, minsup
 
 
-def test_fused_sharded_dispatch_matches_ref():
+@pytest.mark.parametrize("early_stop", [False, True])
+def test_fused_sharded_dispatch_matches_ref(early_stop):
     """ops.make_screen_and_intersect_sharded == kernels.ref oracle,
-    bit-exact (1 shard here; the 8-shard version runs in the subprocess
-    test below)."""
+    bit-exact across minsup values and the in-dispatch ES flag (1 shard
+    here; the 8-shard version runs in the subprocess test below)."""
     from repro.core.rowstore import DeviceRowStore
     from repro.kernels import ops, ref
 
@@ -149,26 +150,38 @@ def test_fused_sharded_dispatch_matches_ref():
     r = np.random.default_rng(3)
     rows_np = r.integers(0, 2 ** 32, (16, 4, 4), dtype=np.uint64
                          ).astype(np.uint32)
-    store = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
     n = 12
     ua = r.integers(0, 16, n).astype(np.int32)
     vb = r.integers(0, 16, n).astype(np.int32)
     slots = np.arange(16, 16 + n, dtype=np.int32)
     rho = r.integers(0, 100, n).astype(np.int32)
 
-    rows0 = np.asarray(store.rows)
-    suf0 = np.asarray(store.suffix)
-    er, esuf, eb, ec = ref.screen_and_intersect_sharded_ref(
-        rows0, suf0, ua, vb, slots, rho, n_shards=store.n_shards)
     fused = ops.make_screen_and_intersect_sharded(
-        mesh, tid_axes=("data", "model"))
-    gr, gs, gb, gc = fused(store.rows, store.suffix, ua, vb, slots, rho)
-    assert np.array_equal(np.asarray(gb), np.asarray(eb))
-    assert np.array_equal(np.asarray(gc), np.asarray(ec))
-    assert np.array_equal(np.asarray(gr), np.asarray(er))
-    assert np.array_equal(np.asarray(gs), np.asarray(esuf))
-    # screen soundness: the bound dominates the exact count
-    assert (np.asarray(gb) >= np.asarray(gc)).all()
+        mesh, tid_axes=("data", "model"), early_stop=early_stop)
+    for minsup in (0, 8, 40, 200):
+        store = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
+        rows0 = np.asarray(store.rows)
+        suf0 = np.asarray(store.suffix)
+        er, esuf, eb, ec, ebl, eal = ref.screen_and_intersect_sharded_ref(
+            rows0, suf0, ua, vb, slots, rho, jnp.int32(minsup),
+            n_shards=store.n_shards, early_stop=early_stop)
+        gr, gs, gb, gc, gbl, gal = fused(store.rows, store.suffix, ua, vb,
+                                         slots, rho, minsup)
+        key = (early_stop, minsup)
+        assert np.array_equal(np.asarray(gb), np.asarray(eb)), key
+        assert np.array_equal(np.asarray(gc), np.asarray(ec)), key
+        assert np.array_equal(np.asarray(gbl), np.asarray(ebl)), key
+        assert np.array_equal(np.asarray(gal), np.asarray(eal)), key
+        assert np.array_equal(np.asarray(gr), np.asarray(er)), key
+        assert np.array_equal(np.asarray(gs), np.asarray(esuf)), key
+        # screen soundness: the bound dominates the exact count for
+        # pairs that stayed alive (dead counts are frozen partials)
+        gb_, gc_, gal_ = np.asarray(gb), np.asarray(gc), np.asarray(gal)
+        assert (gb_[gal_] >= gc_[gal_]).all(), key
+        if not early_stop:
+            # ES off: every pair walks every local block on every shard
+            assert (np.asarray(gbl) == store.n_blocks).all(), key
+            assert np.asarray(gal).all(), key
 
 
 def test_sharded_row_store_grow_preserves_sharding_and_contents():
@@ -305,26 +318,33 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
             assert out == bf, (trial, es)
             assert calls[0] == st.device_calls >= 1, (trial, es)
 
-    # fused dispatch is bit-exact against the 8-shard ref oracle
+    # fused dispatch is bit-exact against the 8-shard ref oracle,
+    # in-dispatch shard-local ES on and off
     r = np.random.default_rng(0)
     rows_np = r.integers(0, 2**32, (16, 8, 4), dtype=np.uint64
                          ).astype(np.uint32)
-    store = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
-    assert store.n_shards == 8
     ua = r.integers(0, 16, 12).astype(np.int32)
     vb = r.integers(0, 16, 12).astype(np.int32)
     slots = np.arange(16, 28, dtype=np.int32)
     rho = r.integers(0, 100, 12).astype(np.int32)
-    rows0, suf0 = np.asarray(store.rows), np.asarray(store.suffix)
-    er, esuf, eb, ec = ref.screen_and_intersect_sharded_ref(
-        rows0, suf0, ua, vb, slots, rho, n_shards=8)
-    fused = ops.make_screen_and_intersect_sharded(
-        mesh, tid_axes=("data", "model"))
-    gr, gs, gb, gc = fused(store.rows, store.suffix, ua, vb, slots, rho)
-    assert np.array_equal(np.asarray(gb), np.asarray(eb))
-    assert np.array_equal(np.asarray(gc), np.asarray(ec))
-    assert np.array_equal(np.asarray(gr), np.asarray(er))
-    assert np.array_equal(np.asarray(gs), np.asarray(esuf))
+    for es in (False, True):
+        for minsup in (0, 64, 400):
+            store = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
+            assert store.n_shards == 8
+            rows0, suf0 = np.asarray(store.rows), np.asarray(store.suffix)
+            er, esuf, eb, ec, ebl, eal = ref.screen_and_intersect_sharded_ref(
+                rows0, suf0, ua, vb, slots, rho, np.int32(minsup),
+                n_shards=8, early_stop=es)
+            fused = ops.make_screen_and_intersect_sharded(
+                mesh, tid_axes=("data", "model"), early_stop=es)
+            gr, gs, gb, gc, gbl, gal = fused(
+                store.rows, store.suffix, ua, vb, slots, rho, minsup)
+            assert np.array_equal(np.asarray(gb), np.asarray(eb)), (es, minsup)
+            assert np.array_equal(np.asarray(gc), np.asarray(ec)), (es, minsup)
+            assert np.array_equal(np.asarray(gbl), np.asarray(ebl)), (es, minsup)
+            assert np.array_equal(np.asarray(gal), np.asarray(eal)), (es, minsup)
+            assert np.array_equal(np.asarray(gr), np.asarray(er)), (es, minsup)
+            assert np.array_equal(np.asarray(gs), np.asarray(esuf)), (es, minsup)
 
     # sharded slab growth preserves the NamedSharding + contents
     store2 = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
@@ -336,6 +356,20 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
     assert np.array_equal(np.asarray(store2.rows[:16]), rows_np)
     assert np.array_equal(np.asarray(store2.suffix[:16]),
                           _local_suffix_tables(rows_np, 8))
+
+    # compaction SHRINKS the sharded slab back, preserving sharding,
+    # live contents bit-for-bit, and remapping slots densely
+    store2.free(big)
+    before_rows = np.asarray(store2.rows[:16])
+    before_suf = np.asarray(store2.suffix[:16])
+    mapping = store2.compact(reserve=4)
+    assert store2.capacity < cap0 * 2 and store2.compactions == 1
+    assert store2.rows.sharding == NamedSharding(
+        mesh, P(None, ("data", "model"), None))
+    new_ids = mapping[np.arange(16)]
+    assert (new_ids >= 0).all()
+    assert np.array_equal(np.asarray(store2.rows)[new_ids], before_rows)
+    assert np.array_equal(np.asarray(store2.suffix)[new_ids], before_suf)
 
     # mining_round on the multi-axis mesh matches a local computation
     round_fn = jax.jit(make_mining_round(mesh, pair_chunk=8))

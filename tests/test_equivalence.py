@@ -1,4 +1,6 @@
-"""Property-based cross-engine equivalence harness (ISSUE 3 satellite).
+"""Property-based cross-engine equivalence harness (ISSUE 3 satellite;
+ISSUE 4 added the distributed engine, the frontier scheduler and the
+allocator-compaction invariants).
 
 Replaces the one-strategy smoke coverage that previously lived in
 test_core_mining.py.  Invariants (paper §III-IV):
@@ -9,7 +11,11 @@ test_core_mining.py.  Invariants (paper §III-IV):
       exact);
   I3  ES never increases the comparison count (paper's guarantee);
   I4  the device PrePost+ comparison counts equal the oracle's exactly;
-  I5  bitmap engines agree with the oracle bit-for-bit.
+  I5  bitmap engines agree with the oracle bit-for-bit;
+  I6  allocator compaction is invisible: live rows/extents survive
+      bit-for-bit, frontier handles are remapped correctly, and mining
+      with compaction forced at every opportunity returns I1's exact
+      result map.
 
 DB generation spans the regimes of the paper's dataset families —
 dense tabular, sparse, powerlaw (retail-like), single-item,
@@ -21,15 +27,29 @@ generator, so local runs keep real coverage.
 
 import random
 
+import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.compat import make_mesh
 from repro.core.oracle import mine, mine_bruteforce, MINERS
-from repro.core.eclat import mine_bitmap
-from repro.core.prepost import mine_prepost_device
+from repro.core.eclat import BitmapMiner, mine_bitmap
+from repro.core.prepost import DevicePrePost, mine_prepost_device
+from repro.core.rowstore import DeviceRowStore, NListPool
 
 REGIMES = ("dense", "sparse", "powerlaw", "single-item", "dup-trans",
            "empty-trans")
+
+_MESH = None
+
+
+def _mesh():
+    """One lazily built single-device mesh shared by every distributed
+    case (keeps the shard_map jit cache warm across the sweep)."""
+    global _MESH
+    if _MESH is None:
+        _MESH = make_mesh((1, 1), ("data", "model"))
+    return _MESH
 
 
 def gen_db(regime: str, seed: int):
@@ -75,6 +95,8 @@ def gen_db(regime: str, seed: int):
 
 def _engines(backend: str):
     """Every miner as ``name -> fn(db, minsup, es) -> (out, stats)``."""
+    from repro.core.distributed import DistributedMiner
+
     eng = {f"oracle-{s}": (lambda s: lambda db, ms, es: mine(
         db, ms, s, early_stop=es))(s) for s in sorted(MINERS)}
     for s in ("eclat", "declat"):
@@ -83,6 +105,9 @@ def _engines(backend: str):
             backend=backend))(s)
     eng["device-prepost"] = lambda db, ms, es: mine_prepost_device(
         db, ms, early_stop=es, backend=backend)
+    if backend == "jnp":                 # shard_map path is jnp-only
+        eng["distributed-eclat"] = lambda db, ms, es: DistributedMiner(
+            _mesh(), early_stop=es, block_words=4).mine(db, ms)
     return eng
 
 
@@ -198,3 +223,208 @@ def test_property_device_prepost_counts_equal_oracle(case):
         assert d.comparisons == o.comparisons                       # I4
         assert d.es_checks == o.es_checks
         assert d.es_aborts == o.es_aborts
+
+
+# ---------------------------------------------------------------------------
+# I6: allocator compaction invariants (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def _alloc_free_pattern(rng, store_like, rounds=4):
+    """Random alloc/free churn; returns the surviving handle list."""
+    live = []
+    for _ in range(rounds):
+        k = rng.randint(1, 6)
+        live.extend(int(s) for s in store_like.alloc(k))
+        rng.shuffle(live)
+        drop = live[:rng.randint(0, len(live) // 2)]
+        live = live[len(drop):]
+        store_like.free(drop)
+    return live
+
+
+def _check_rowstore_compaction(seed):
+    """Compaction preserves every live row AND its suffix table
+    bit-for-bit, maps live slots densely onto [0, n_live), and leaves
+    dead slots unmapped (-1)."""
+    rng = random.Random(seed)
+    r = np.random.default_rng(seed)
+    rows_np = r.integers(0, 2 ** 32, (5, 3, 4), dtype=np.uint64
+                         ).astype(np.uint32)
+    store = DeviceRowStore(rows_np, capacity=8)
+    live = list(range(5)) + _alloc_free_pattern(rng, store)
+    before = {s: (np.asarray(store.rows[s]), np.asarray(store.suffix[s]))
+              for s in live}
+    old_cap = store.capacity
+    mapping = store.compact(reserve=rng.randint(0, 8))
+    assert mapping.shape == (old_cap,)
+    new_ids = mapping[np.asarray(live, np.int64)]
+    assert (new_ids >= 0).all()
+    assert sorted(new_ids.tolist()) == list(range(len(live)))  # dense
+    dead = np.setdiff1d(np.arange(old_cap), np.asarray(live, np.int64))
+    assert (mapping[dead] == -1).all()
+    for s, ni in zip(live, new_ids):
+        assert np.array_equal(np.asarray(store.rows[int(ni)]), before[s][0])
+        assert np.array_equal(np.asarray(store.suffix[int(ni)]),
+                              before[s][1])
+    # post-compaction alloc/free still works and hands out fresh slots
+    fresh = store.alloc(3)
+    assert len(set(fresh.tolist()) & set(new_ids.tolist())) == 0
+    store.free(fresh)
+
+
+def _check_pool_compaction(seed):
+    """Pool compaction preserves live extents bit-for-bit under stable
+    row ids, shrinks extents to the bucket of their actual length, and
+    recycles the freed mass (live_codes never grows)."""
+    rng = random.Random(seed)
+    r = np.random.default_rng(seed)
+    pool = NListPool(capacity=64)
+    live = {}
+    for _ in range(4):
+        lens = [rng.randint(1, 40) for _ in range(rng.randint(1, 5))]
+        rows = pool.alloc_rows(lens)
+        arrays = [r.integers(0, 1000, (ln, 3)).astype(np.int32)
+                  for ln in lens]
+        pool.write_rows(rows, arrays)
+        for row, a in zip(rows, arrays):
+            live[int(row)] = a
+        drop = rng.sample(sorted(live), rng.randint(0, len(live) // 2))
+        pool.free_rows(drop)
+        for row in drop:
+            del live[row]
+    live_before = pool.live_codes
+    pool.compact()
+    assert pool.compactions == 1
+    assert pool.live_codes <= live_before         # tight buckets only
+    for row, a in live.items():
+        assert np.array_equal(pool.read_row(row), a), row
+    # the pool still serves allocations after the epoch
+    rows = pool.alloc_rows([3])
+    pool.free_rows(rows)
+
+
+def test_compaction_bit_exact_sweep():
+    """Deterministic seeds of the two compaction properties (run even
+    when hypothesis is absent — same generator as the @given tests)."""
+    for seed in range(6):
+        _check_rowstore_compaction(seed)
+        _check_pool_compaction(seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_property_rowstore_compaction_bit_exact(seed):
+    _check_rowstore_compaction(seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_property_nlist_pool_compaction_bit_exact(seed):
+    _check_pool_compaction(seed)
+
+
+def test_sharded_rowstore_compaction_shrinks_slab():
+    """Under the block-sharded NamedSharding slab, compaction shrinks
+    capacity back after a growth spike and preserves placement (the
+    "long distributed runs can shrink again" ROADMAP item)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = _mesh()
+    r = np.random.default_rng(1)
+    rows_np = r.integers(0, 2 ** 32, (6, 2, 4), dtype=np.uint64
+                         ).astype(np.uint32)
+    store = DeviceRowStore(rows_np, capacity=8, mesh=mesh)
+    big = store.alloc(200)               # force growth
+    grown_cap = store.capacity
+    store.free(big)
+    assert store.compact_if_sparse(0.5, reserve=4) is not None
+    assert store.capacity < grown_cap
+    expected = NamedSharding(mesh, P(None, ("data", "model"), None))
+    assert store.rows.sharding == expected
+    assert np.array_equal(np.asarray(store.rows[:6, :2]), rows_np)
+
+
+@pytest.mark.parametrize("regime", ["dense", "powerlaw", "sparse"])
+def test_compaction_forced_engines_match_bruteforce(regime):
+    """I6 end-to-end: compact at EVERY drain-group boundary where the
+    slab could halve (threshold 1.0) and the result maps stay exact —
+    this exercises frontier-handle remapping under real DFS churn."""
+    from repro.core.distributed import DistributedMiner
+
+    for seed in range(3):
+        db, minsup = gen_db(regime, seed)
+        expected = mine_bruteforce(db, minsup)
+        out, st_b = BitmapMiner(
+            scheme="eclat", early_stop=True, block_words=2, pair_chunk=8,
+            compact_occupancy=1.0).mine(db, minsup)
+        assert out == expected, (regime, seed, "bitmap")
+        out, st_p = DevicePrePost(
+            early_stop=True, pair_chunk=8,
+            compact_occupancy=1.0).mine(db, minsup)
+        assert out == expected, (regime, seed, "prepost")
+        out, st_d = DistributedMiner(
+            _mesh(), early_stop=True, block_words=2, pair_chunk=8,
+            compact_occupancy=1.0).mine(db, minsup)
+        assert out == expected, (regime, seed, "distributed")
+
+
+def test_nlist_free_list_split_recycles_larger_extents():
+    """A small-bucket allocation with an empty free list recycles a
+    LARGER free extent by splitting it (head = requested bucket, tail
+    released to smaller buckets) instead of bumping fresh capacity."""
+    pool = NListPool(capacity=1024)
+    big = pool.alloc_rows([500])         # bucket 512
+    off_big = pool.offsets(big)[0]
+    pool.free_rows(big)
+    bump0 = pool._bump
+    small = pool.alloc_rows([5] * 4)     # 4x bucket 8, no 8-bucket frees
+    assert pool._bump == bump0           # no new capacity consumed
+    offs = sorted(pool.offsets(small).tolist())
+    assert offs[0] == off_big            # head of the split extent
+    assert all(off_big <= o < off_big + 512 for o in offs)
+    pool.free_rows(small)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: one drain-group code path shared by all three engines
+# ---------------------------------------------------------------------------
+
+def test_all_engines_share_frontier_scheduler(monkeypatch):
+    """All three miners drive their DFS through
+    ``core.frontier.FrontierScheduler.drain_group`` — no duplicated
+    drain loop is left in eclat.py / prepost.py / distributed.py."""
+    import repro.core.eclat as E
+    import repro.core.prepost as PP
+    import repro.core.distributed as D
+    from repro.core import frontier
+
+    # the per-engine traversal loops are gone
+    for mod, names in ((E, ("_traverse",)), (PP, ("_traverse",)),
+                       (D, ("_traverse",))):
+        for name in names:
+            assert not hasattr(mod, name)
+    assert not hasattr(E.BitmapMiner, "_traverse")
+    assert not hasattr(PP.DevicePrePost, "_traverse")
+
+    drained_by = {}
+    real = frontier.FrontierScheduler.drain_group
+
+    def counting(self, *a, **k):
+        drained_by[type(self.client).__name__] = drained_by.get(
+            type(self.client).__name__, 0) + 1
+        return real(self, *a, **k)
+
+    monkeypatch.setattr(frontier.FrontierScheduler, "drain_group",
+                        counting)
+    db, minsup = gen_db("dense", 0)
+    expected = mine_bruteforce(db, minsup)
+    out, _ = E.BitmapMiner(block_words=2, pair_chunk=4).mine(db, minsup)
+    assert out == expected
+    out, _ = PP.DevicePrePost(pair_chunk=4).mine(db, minsup)
+    assert out == expected
+    out, _ = D.DistributedMiner(_mesh(), block_words=2,
+                                pair_chunk=4).mine(db, minsup)
+    assert out == expected
+    assert set(drained_by) == {"BitmapMiner", "DevicePrePost",
+                               "DistributedMiner"}
+    assert all(v >= 1 for v in drained_by.values())
