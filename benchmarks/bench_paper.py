@@ -173,6 +173,7 @@ def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
         report["datasets"][name] = {
             "dataset": {"n_trans": len(db), "minsup": minsup},
             "frequent_itemsets": len(out_es),
+            "frequent_children": sum(1 for s in out_es if len(s) >= 2),
             "es": {**st_es.as_dict(), "wall_s": round(t_es, 3)},
             "full": {**st_no.as_dict(), "wall_s": round(t_no, 3)},
             "word_ops_saved_frac": st_es.word_ops_saved_frac,
@@ -188,13 +189,25 @@ def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
               f"device_calls={st_es.device_calls}+"
               f"{st_pes.device_calls}, "
               f"compactions={st_es.compactions}+{st_pes.compactions}, "
-              f"peak={st_es.peak_rows}r/{st_pes.peak_codes}c",
+              f"peak={st_es.peak_rows}r/{st_pes.peak_codes}c, "
+              f"scatters={st_es.child_scatters}/{st_es.candidates}cand "
+              f"({st_es.scatter_words}+{st_pes.scatter_words}w)",
               file=sys.stderr)
 
     # Write the artifact BEFORE the acceptance asserts: when a gate
     # trips, CI must still upload the telemetry needed to debug it.
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
+    # Survivor-only materialization (ISSUE 5): every engine's child
+    # scatter count equals the frequent children, never the candidate
+    # count, ES on or off.
+    for name, ds in report["datasets"].items():
+        n_children = ds["frequent_children"]
+        for run in (ds["es"], ds["full"],
+                    ds["prepost"]["es"], ds["prepost"]["full"]):
+            assert run["child_scatters"] == n_children, (
+                f"{name}: scattered {run['child_scatters']} children, "
+                f"{n_children} are frequent")
     pl = report["datasets"]["powerlaw"]
     assert pl["word_ops_saved_frac"] > 0, "ES saved no word ops (powerlaw)"
     assert pl["prepost"]["comparisons_saved_frac"] > 0, (

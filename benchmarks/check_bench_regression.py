@@ -12,7 +12,12 @@ build (ROADMAP "CI trajectory" item).  Per smoke dataset:
 * allocator memory: ``peak_rows`` (bitmap) and ``peak_codes``
   (PrePost+) must not regress beyond ``--peak-tol`` (default 10% — the
   build fails if the frontier/compaction layer starts holding
-  meaningfully more live mass than the committed baseline).
+  meaningfully more live mass than the committed baseline);
+* scatter traffic (ISSUE 5): ``scatter_words`` — the device words
+  written by child materialization — must not regress beyond
+  ``--peak-tol`` for either engine; survivor-only scatter makes this a
+  deterministic function of the frequent children, so an increase
+  means dead candidates started being materialised again.
 
 All metrics are deterministic functions of the engines (integer math
 over seeded synthetic datasets).  A legitimate engine change that
@@ -50,6 +55,12 @@ def compare_dataset(name: str, current: dict, baseline: dict,
             failures.append(
                 f"{name}/{run}: peak_rows regressed {base['peak_rows']} "
                 f"-> {cur['peak_rows']} (limit {peak_limit:.0f})")
+        scatter_limit = base["scatter_words"] * (1.0 + peak_tol)
+        if cur["scatter_words"] > scatter_limit:
+            failures.append(
+                f"{name}/{run}: scatter_words regressed "
+                f"{base['scatter_words']} -> {cur['scatter_words']} "
+                f"(limit {scatter_limit:.0f})")
         pcur, pbase = current["prepost"][run], baseline["prepost"][run]
         if pcur["comparisons"] > pbase["comparisons"]:
             failures.append(
@@ -65,6 +76,12 @@ def compare_dataset(name: str, current: dict, baseline: dict,
                 f"{name}/{run}: prepost peak_codes regressed "
                 f"{pbase['peak_codes']} -> {pcur['peak_codes']} "
                 f"(limit {peak_limit:.0f})")
+        scatter_limit = pbase["scatter_words"] * (1.0 + peak_tol)
+        if pcur["scatter_words"] > scatter_limit:
+            failures.append(
+                f"{name}/{run}: prepost scatter_words regressed "
+                f"{pbase['scatter_words']} -> {pcur['scatter_words']} "
+                f"(limit {scatter_limit:.0f})")
     cur_saved = current["word_ops_saved_frac"]
     base_saved = baseline["word_ops_saved_frac"]
     if cur_saved < base_saved - word_ops_tol:
@@ -112,18 +129,23 @@ def main() -> None:
                   f"{base_ds[run]['word_ops']} -> "
                   f"{cur_ds[run]['word_ops']}, peak_rows "
                   f"{base_ds[run]['peak_rows']} -> "
-                  f"{cur_ds[run]['peak_rows']}, prepost comparisons "
+                  f"{cur_ds[run]['peak_rows']}, scatter_words "
+                  f"{base_ds[run]['scatter_words']} -> "
+                  f"{cur_ds[run]['scatter_words']}, prepost comparisons "
                   f"{base_ds['prepost'][run]['comparisons']} -> "
                   f"{cur_ds['prepost'][run]['comparisons']}, peak_codes "
                   f"{base_ds['prepost'][run]['peak_codes']} -> "
-                  f"{cur_ds['prepost'][run]['peak_codes']}",
+                  f"{cur_ds['prepost'][run]['peak_codes']}, "
+                  f"prepost scatter_words "
+                  f"{base_ds['prepost'][run]['scatter_words']} -> "
+                  f"{cur_ds['prepost'][run]['scatter_words']}",
                   file=sys.stderr)
     if failures:
         print("BENCH REGRESSION:\n  " + "\n  ".join(failures),
               file=sys.stderr)
         sys.exit(1)
     print("bench diff ok (no word_ops/device_calls/comparisons/"
-          "peak_rows/peak_codes regression)", file=sys.stderr)
+          "peak_rows/peak_codes/scatter_words regression)", file=sys.stderr)
 
 
 if __name__ == "__main__":

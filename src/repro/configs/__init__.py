@@ -38,7 +38,8 @@ def get_arch(arch_id: str) -> ArchSpec:
     try:
         return REGISTRY[arch_id]
     except KeyError:
-        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+        raise KeyError(
+            f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}") from None
 
 
 def get_shape(spec: ArchSpec, shape_id: str) -> ShapeDef:

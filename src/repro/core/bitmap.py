@@ -49,6 +49,17 @@ NL_SENTINEL = np.iinfo(np.int32).max
 # N-lists are rare but must not be a hard error).
 NL_LEN_BUCKETS = (8, 32, 128, 512, 2048, 8192, 32768)
 
+# Pair-chunk batch buckets, one table per dispatch family.  They live
+# HERE, next to :func:`bucket_pad`, so the engines' pair-chunk clamp
+# (``min(pair_chunk, BUCKETS[-1])``) and their pad calls can never
+# drift apart again (pre-ISSUE-5 each engine kept a private, diverging
+# ``_PAIR_BUCKETS`` copy).  The bitmap table tops out higher because a
+# bitmap pair costs O(row) operand traffic regardless of batch width,
+# while an N-list chunk's gather width is the bucket of its LONGEST
+# operand — huge merge batches amplify padding instead of throughput.
+PAIR_CHUNK_BUCKETS = (64, 256, 1024, 4096, 16384, 65536, 262144)
+NL_PAIR_CHUNK_BUCKETS = (64, 256, 1024, 4096, 8192, 32768)
+
 
 def nl_pad_len(n: int) -> int:
     """Smallest N-list bucket >= ``n`` (power-of-two fallback past the
@@ -60,6 +71,21 @@ def nl_pad_len(n: int) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def nl_pad_len_np(lengths: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`nl_pad_len` (host): the per-pair length-bucket
+    key the frontier scheduler sorts drained pairs by so one huge N-list
+    cannot widen the gather for a whole chunk of small ones."""
+    lengths = np.asarray(lengths, np.int64)
+    buckets = np.asarray(NL_LEN_BUCKETS, np.int64)
+    idx = np.searchsorted(buckets, np.maximum(lengths, 0))
+    out = buckets[np.minimum(idx, len(buckets) - 1)]
+    big = lengths > buckets[-1]
+    if big.any():
+        out = out.copy()
+        out[big] = [nl_pad_len(int(v)) for v in lengths[big]]
+    return out
 
 
 def bucket_pad(arr: np.ndarray, n: int, bucket_sizes: Sequence[int],

@@ -32,7 +32,12 @@ round programs (screen/count/materialize — 3 dispatches + 2
 collectives per round, with their own ad-hoc slab and duplicated
 free-list plumbing) are gone; a mining round is ONE dispatch with ONE
 psum, and the row store grows on demand instead of dead-ending in a
-"row store exhausted" error.
+"row store exhausted" error.  Since ISSUE 5 the psum is also the
+dispatch's internal dependency edge for **survivor-only
+materialization**: every shard knows the global count/alive before its
+shard-local scatter phase, so a candidate the screen or scan killed is
+never written to the slab — child scatter traffic scales with frequent
+children, not candidates (``stats.child_scatters``).
 
 ``make_mining_round`` / ``make_mining_round_v2`` remain: they are the
 standalone round programs used by the dry-run/roofline harness (cost
@@ -238,7 +243,8 @@ class DistributedMiner(BitmapMiner):
             store.rows, store.suffix,
             _bucket_pad(ua, n), _bucket_pad(vb, n),
             _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped
-            _bucket_pad(rho, n), np.int32(self._minsup))
+            _bucket_pad(rho, n), np.int32(self._minsup),
+            np.int32(self._n_blocks))   # real (unpadded) block count
         stats.device_calls += 1
         bound = np.asarray(bound[:n])
         count = np.asarray(count[:n])
@@ -248,9 +254,11 @@ class DistributedMiner(BitmapMiner):
         # local blocks against the conservative threshold
         # ``minsup - slack`` (slack = the screen mass every OTHER shard
         # could still contribute) and aborts mid-scan once the pair is
-        # provably infrequent globally.  ``blocks`` is the psum of local
-        # blocks actually scanned, so word_ops now measures real savings
-        # like the single-device path.
+        # provably infrequent globally.  ``blocks`` is the psum of REAL
+        # local blocks scanned (the dispatch discounts the store's
+        # all-zero block padding — ISSUE 5), so word_ops and
+        # word_ops_full are consistently unpadded: an ES-off run reports
+        # word_ops == word_ops_full and saved_frac is never negative.
         stats.word_ops += int(blocks.sum()) * self.block_words
         if self.early_stop:
             screen_alive = bound >= self._minsup

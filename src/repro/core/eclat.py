@@ -19,15 +19,19 @@ each chunk is exactly **one** device dispatch
     suffix bound drops below minsup (the paper's INTERSECT_ES /
     DIFFERENCE_ES quantised to blocks);
   * scatter: child rows *and* their suffix-popcount tables are computed
-    on device and written into preallocated slots of the same slab.
+    on device and written into preallocated slots of the same slab —
+    **survivor-only** (ISSUE 5): the count phase completes before the
+    scatter phase and gates it, so dead candidates cost zero scatter
+    words (``stats.child_scatters`` counts frequent children exactly).
 
-Slots are allocated pessimistically (one per candidate pair) before the
-dispatch and the dead ones are returned to the free list right after —
-free-list traffic is pure host bookkeeping, so infrequent candidates
-still cost zero extra device work.  When occupancy drops far enough the
-scheduler compacts the slab at a drain-group boundary
-(``DeviceRowStore.compact_if_sparse``) and remaps the frontier's slot
-handles through the returned mapping.
+Slots are still *reserved* pessimistically (one per candidate pair —
+the scatter destinations must exist before the dispatch) and the dead
+ones are returned to the free list right after, but nothing was ever
+written to them: free-list traffic is pure host bookkeeping, so
+infrequent candidates cost zero extra device work.  When occupancy
+drops far enough the scheduler compacts the slab at a drain-group
+boundary (``DeviceRowStore.compact_if_sparse``) and remaps the
+frontier's slot handles through the returned mapping.
 
 Work metric: ``word_ops`` — uint32 word operations actually performed
 (blocks_done x block_words per pair; the fused screen is block 0 of the
@@ -51,7 +55,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.bitmap import BitmapDB, DEFAULT_BLOCK_WORDS, bucket_pad
+from repro.core.bitmap import (BitmapDB, DEFAULT_BLOCK_WORDS,
+                               PAIR_CHUNK_BUCKETS, bucket_pad)
 from repro.core.frontier import (Child, ClassNode, EngineAccounting,
                                  FrontierScheduler)
 from repro.core.rowstore import DeviceRowStore
@@ -59,7 +64,9 @@ from repro.kernels import ops
 
 ItemsetSupports = Dict[FrozenSet[Hashable], int]
 
-_PAIR_BUCKETS = (64, 256, 1024, 4096, 16384, 65536, 262144)
+# Canonical table lives in core.bitmap next to bucket_pad (ISSUE 5
+# consolidation) so the pair-chunk clamp and the pad logic cannot drift.
+_PAIR_BUCKETS = PAIR_CHUNK_BUCKETS
 
 
 @dataclass
@@ -167,7 +174,11 @@ class BitmapMiner:
             supports=bdb.supports.astype(np.int32),
             payload=True)                  # payload: is_tidlist
         self._minsup = minsup
-        self._n_blocks = store.n_blocks   # padded under a sharded store
+        # Work metrics use the REAL block count: a sharded store pads
+        # its block axis up to the shard count, and charging those
+        # all-zero pad blocks to ``word_ops_full`` inflated every
+        # DistributedMiner run's saved-fraction (ISSUE 5 bugfix).
+        self._n_blocks = bdb.n_blocks
         self._store = store
         self._out = out
         self._stats = stats
@@ -218,11 +229,17 @@ class BitmapMiner:
         support = cnt if self.scheme == "eclat" else rho - cnt
         # Dead pairs carry frozen (partial) counts; in "andnot" mode a frozen
         # count *overestimates* the support, so aliveness is load-bearing.
-        freq = support >= self._minsup
-        if self.early_stop:
-            freq = np.logical_and(freq, alive)
+        # This mask is exactly the dispatch's in-kernel scatter gate
+        # (ref._survivor_mask): only these children were materialised.
+        freq = np.logical_and(support >= self._minsup, alive)
 
         kept_idx = np.nonzero(freq)[0]
+        stats.child_scatters += int(kept_idx.size)
+        # Real (unpadded) blocks, like word_ops/word_ops_full: the
+        # telemetry stays shard-count invariant even though a sharded
+        # store physically pads each child row's block axis with zeros.
+        stats.scatter_words += (int(kept_idx.size) * self._n_blocks
+                                * self.block_words)
         store.free(slots[~freq])                  # dead children: recycle
         return [(int(ki), int(slots[ki]), int(support[ki]), None)
                 for ki in kept_idx]
@@ -261,15 +278,18 @@ class BitmapMiner:
         for "andnot") and ``alive`` marks pairs that survived ES.  The
         distributed miner overrides this with the shard_map dispatch."""
         n = int(ua.size)
-        kernel_minsup = self._minsup if self.early_stop else 0
         cap = store.capacity
+        # minsup is always the real threshold: the dispatch's
+        # survivor-only scatter gate needs it even with ES disabled
+        # (the ``early_stop`` flag alone controls the in-scan abort).
         store.rows, store.suffix, cnt, blocks, alive = \
             ops.screen_and_intersect(
                 store.rows, store.suffix,
                 _bucket_pad(ua, n), _bucket_pad(vb, n),
                 _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped
-                _bucket_pad(rho, n), jnp.int32(kernel_minsup),
-                mode=mode, backend=self.backend)
+                _bucket_pad(rho, n), jnp.int32(self._minsup),
+                mode=mode, early_stop=self.early_stop,
+                backend=self.backend)
         stats.device_calls += 1
         cnt = np.asarray(cnt[:n])
         blocks = np.asarray(blocks[:n])

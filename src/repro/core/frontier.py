@@ -36,6 +36,11 @@ Client protocol (duck-typed; the miners implement it directly):
 ``maybe_compact(reserve) -> Optional[np.ndarray]``
     Compact the allocator if occupancy warrants it; return an old->new
     row-id mapping when handles moved (``None`` when ids are stable).
+    ``reserve`` covers the WHOLE drain group about to run.
+``chunk_sort_key(cols) -> Optional[np.ndarray]`` (optional)
+    Per-pair sort key (e.g. operand length bucket): drained pairs are
+    stably reordered by it before chunk slicing so chunks stay
+    dispatch-width homogeneous (see ``_assemble``).
 
 Work accounting for every engine flows through one shared struct
 (:class:`EngineAccounting`): ``device_calls``, ES deaths, allocator
@@ -69,6 +74,14 @@ class EngineAccounting:
     peak_live: int = 0           # peak live allocator mass
     compaction_occupancy: float = 0.0
     runtime_s: float = 0.0
+    # Survivor-only materialization telemetry (ISSUE 5): every fused
+    # dispatch scatters ONLY the children whose support cleared minsup,
+    # so ``child_scatters`` equals the number of frequent children (not
+    # candidates) and ``scatter_words`` is the device words they cost —
+    # bitmap rows (n_blocks * block_words each) or PPC-code words
+    # (3 * child_len each).
+    child_scatters: int = 0
+    scatter_words: int = 0
 
     @property
     def deaths(self) -> int:
@@ -89,6 +102,8 @@ class EngineAccounting:
             "deaths": self.deaths,
             "compactions": self.compactions,
             "compaction_occupancy": round(self.compaction_occupancy, 4),
+            "child_scatters": self.child_scatters,
+            "scatter_words": self.scatter_words,
         }
 
 
@@ -176,13 +191,18 @@ class FrontierScheduler:
             drained, total = self.drain_group()
             if not drained:
                 continue
-            mapping = self.client.maybe_compact(
-                min(total, self.pair_chunk))
+            # Compaction reserve must cover the WHOLE drain group, not
+            # one pair_chunk: a group's chunks allocate children
+            # cumulatively (earlier chunks' survivors stay live while
+            # later chunks allocate), so reserving ``min(total,
+            # pair_chunk)`` let a compaction shrink to a size the same
+            # group immediately regrew (compact -> grow thrash).
+            mapping = self.client.maybe_compact(total)
             if mapping is not None:
                 self.remap(mapping, drained)
 
             cols, meta = self._assemble(drained)
-            groups: Dict[Tuple[int, int], List[Child]] = {}
+            groups: Dict[Tuple[int, int], List[Tuple[int, Child]]] = {}
             for lo in range(0, total, self.pair_chunk):
                 sl = slice(lo, lo + self.pair_chunk)
                 chunk = {k: v[sl] for k, v in cols.items()}
@@ -193,8 +213,13 @@ class FrontierScheduler:
                     itemset = klass.itemsets[a] + (klass.itemsets[b][-1],)
                     self.client.emit(itemset, support)
                     groups.setdefault((ci, a), []).append(
-                        Child(itemset, row, support, extra))
-            for (ci, _a), kids in groups.items():
+                        (b, Child(itemset, row, support, extra)))
+            # Child classes are rebuilt in canonical sibling order (b
+            # ascending), NOT evaluation order: chunk_sort_key may have
+            # permuted the pairs, and class member order is load-bearing
+            # (pair orientation / search order within the class).
+            for ci, _a in sorted(groups):
+                kids = [c for _b, c in sorted(groups[(ci, _a)])]
                 self.push(self.client.make_class(drained[ci], kids))
             for klass in drained:
                 self.client.release(klass)
@@ -203,7 +228,17 @@ class FrontierScheduler:
                   ) -> Tuple[Dict[str, np.ndarray],
                              List[Tuple[int, int, int]]]:
         """Concatenate every drained class's sibling-pair triangle into
-        global operand columns plus (class, a, b) metadata."""
+        global operand columns plus (class, a, b) metadata.
+
+        Length-aware composition (ISSUE 5): a client whose per-pair
+        dispatch width depends on operand size (the N-list engine — its
+        gather widths are the buckets of the chunk *maxima*) exposes
+        ``chunk_sort_key(cols) -> int array``; the assembled pairs are
+        then stably sorted by that key before chunk slicing, so one
+        huge operand no longer widens the dispatch for every pair in
+        its chunk.  The permutation is applied to the metadata too, and
+        result sets are order-independent, so this only moves padding.
+        """
         cols_l: Dict[str, List[np.ndarray]] = {}
         meta: List[Tuple[int, int, int]] = []
         for ci, klass in enumerate(drained):
@@ -213,4 +248,11 @@ class FrontierScheduler:
                 cols_l.setdefault(key, []).append(np.asarray(col))
             meta.extend((ci, int(a), int(b)) for a, b in zip(ia, ib))
         cols = {k: np.concatenate(v) for k, v in cols_l.items()}
+        key_fn = getattr(self.client, "chunk_sort_key", None)
+        if key_fn is not None and len(meta) > 1:
+            key = key_fn(cols)
+            if key is not None:
+                order = np.argsort(np.asarray(key), kind="stable")
+                cols = {k: c[order] for k, c in cols.items()}
+                meta = [meta[int(i)] for i in order]
         return cols, meta

@@ -546,5 +546,7 @@ def mine(db: Database, minsup: int, scheme: str = "eclat",
     try:
         fn = MINERS[scheme]
     except KeyError:
-        raise ValueError(f"unknown scheme {scheme!r}; pick from {sorted(MINERS)}")
+        raise ValueError(
+            f"unknown scheme {scheme!r}; pick from {sorted(MINERS)}"
+        ) from None
     return fn(db, minsup, early_stop=early_stop)

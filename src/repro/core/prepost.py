@@ -7,17 +7,23 @@ device-resident (the ISSUE 3 unification — third engine on the shared
 allocator): every N-list the DFS can still touch is an extent of one
 persistent ``int32[capacity, 3]`` PPC-code slab
 (``core.rowstore.NListPool``), and the host only ever moves row indices
-and small int vectors around.  Each sibling pair chunk is exactly ONE
-fused device dispatch (``kernels.ops.nlist_extend``):
+and small int vectors around.  Each sibling pair chunk is TWO fused
+device dispatches since ISSUE 5 (survivor-only, allocation-tight
+materialization):
 
-  * gather: both operand N-lists are picked out of the slab by extent
-    offset (no host padding, no re-upload);
-  * merge: the vmapped two-pointer merge carries the paper's
-    ``rho_V - skip`` early-stopping criterion (with the Z-mass erratum
-    fix, see core/oracle.py) inside the ``lax.while_loop`` guard;
-  * Z-merge + scatter: consecutive slots sharing a V ancestor code are
-    combined on device (Alg. 3 line 31) and the compacted child N-lists
-    are written straight into preallocated extents of the same slab.
+  * pre-pass (``kernels.ops.nlist_presize``): gather both operand
+    N-lists out of the slab by extent offset, run the vmapped
+    two-pointer merge carrying the paper's ``rho_V - skip``
+    early-stopping criterion (with the Z-mass erratum fix, see
+    core/oracle.py) inside the ``lax.while_loop`` guard, and count the
+    Z-merge groups — the host learns every candidate's exact child
+    length and support while the match table stays on device;
+  * scatter pass (``kernels.ops.nlist_scatter``): Z-merge consecutive
+    slots sharing a V ancestor code (Alg. 3 line 31) and write the
+    compacted child N-lists straight into *tight* extents allocated
+    for the surviving children only — dead candidates cost zero
+    scatter words and zero pool mass, and a chunk with no survivors
+    skips this dispatch entirely.
 
 Comparison counts reported by the device path are exactly the oracle's
 (same merge, same abort points); tests assert equality (invariant I4).
@@ -46,12 +52,15 @@ from repro.core.oracle import PPCTree, MiningStats
 from repro.core.frontier import (Child, ClassNode, EngineAccounting,
                                  FrontierScheduler)
 from repro.core.rowstore import NListPool
-from repro.core.bitmap import bucket_pad, nl_pad_len
+from repro.core.bitmap import (NL_PAIR_CHUNK_BUCKETS, bucket_pad,
+                               nl_pad_len, nl_pad_len_np)
 from repro.kernels import ops
 
 ItemsetSupports = Dict[FrozenSet[Hashable], int]
 
-_PAIR_BUCKETS = (64, 256, 1024, 4096, 8192, 32768)
+# Canonical table lives in core.bitmap next to bucket_pad (ISSUE 5
+# consolidation) so the pair-chunk clamp and the pad logic cannot drift.
+_PAIR_BUCKETS = NL_PAIR_CHUNK_BUCKETS
 
 
 def _pad_len(n: int) -> int:
@@ -86,18 +95,19 @@ class DevicePrePostStats(MiningStats, EngineAccounting):
 
 
 class DevicePrePost:
-    """PrePost+ over a device-resident N-list pool with one fused
-    gather→merge→Z-merge→scatter dispatch per pair chunk.
+    """PrePost+ over a device-resident N-list pool with a fused
+    merge pre-pass + survivor-only scatter pass per pair chunk.
 
     The DFS is ``core.frontier.FrontierScheduler`` — the same work-stack
     + cross-class drain-group batching as the bitmap engines, so deep
     DFS regions no longer issue one dispatch per class member's sibling
     window: pairs from MANY classes (with heterogeneous U operands —
-    ``nlist_extend`` takes per-pair extents) fill each chunk.
-    ``compact_occupancy``: see ``BitmapMiner`` — for the pool, a
-    compaction epoch also shrinks every extent to the bucket of its
-    actual length, undoing the pessimistic ``min(|U|, |V|)`` child
-    allocation; 0 disables.
+    the dispatches take per-pair extents) fill each chunk, and
+    :meth:`chunk_sort_key` keeps each chunk's gather widths homogeneous
+    by length bucket.  Child extents are allocated from the pre-pass's
+    *exact* lengths for *survivors only* — the pool never holds a
+    pessimistic ``min(|U|, |V|)`` extent.  ``compact_occupancy``: see
+    ``BitmapMiner``; 0 disables.
     """
 
     def __init__(self, early_stop: bool = True, pair_chunk: int = 8192,
@@ -155,37 +165,50 @@ class DevicePrePost:
                 "v_len": lens[ib].astype(np.int32),
                 "rho_v": klass.supports[ib].astype(np.int32)}
 
+    def chunk_sort_key(self, cols: Dict[str, np.ndarray]) -> np.ndarray:
+        """Length-aware drain-group composition (ISSUE 5): the scheduler
+        stably sorts drained pairs by the bucket of their longest
+        operand before chunk slicing, so one huge N-list widens the
+        ``lu``/``lv`` gather only for its own (homogeneous) chunk."""
+        return nl_pad_len_np(np.maximum(cols["u_len"], cols["v_len"]))
+
     def evaluate_pairs(self, cols: Dict[str, np.ndarray],
                        ) -> List[Tuple[int, int, int, Any]]:
-        """One pair-chunk slice -> ONE fused ``nlist_extend`` dispatch.
+        """One pair-chunk slice -> merge pre-pass + survivor-only
+        scatter (ISSUE 5: two dispatches instead of one, pessimistic
+        extents for none).
+
+        The pre-pass (``ops.nlist_presize``) runs the gather + ES merge
+        and returns each candidate's exact child length, support and
+        aliveness — the merge loop runs exactly once, so comparison
+        counts stay exactly the oracle's (I4).  The host then allocates
+        extents for the *survivors only*, sized by their *actual*
+        lengths (the pessimistic ``min(|U|, |V|)`` allocation is gone),
+        and the scatter pass (``ops.nlist_scatter``) Z-merges the
+        device-resident match table into those tight extents.  A chunk
+        with no survivors skips the scatter dispatch entirely.
 
         Returns the frequent children as ``(ki, row, support, length)``
         tuples.  Operand U/V extents vary per pair (cross-class chunk):
-        the gather widths are the buckets of the chunk maxima."""
+        the gather widths are the buckets of the chunk maxima, kept
+        homogeneous by :meth:`chunk_sort_key`."""
         pool, stats = self._pool, self._stats
         u_len, v_len = cols["u_len"], cols["v_len"]
         n = int(u_len.size)
         stats.candidates += n
         lu = nl_pad_len(int(u_len.max()))
         lv = nl_pad_len(int(v_len.max()))
-
-        # Pessimistic child extents: |child| <= min(|U|, |V|); extents of
-        # dead candidates are recycled right after the dispatch, so
-        # infrequent pairs cost free-list bookkeeping only.  Offsets are
-        # resolved AFTER the allocation (it may grow the slab).
-        child_rows = pool.alloc_rows(np.minimum(u_len, v_len))
         u_off = pool.offsets(cols["u_row"])
         v_off = pool.offsets(cols["v_row"])
-        out_off = pool.offsets(child_rows)
 
         def pad(arr, fill=0):
             return bucket_pad(arr, n, _PAIR_BUCKETS, fill)
-        (pool.codes, child_len, support, cmps, checks,
-         alive) = ops.nlist_extend(
-            pool.codes, pad(u_off), pad(u_len), pad(v_off), pad(v_len),
-            pad(out_off, fill=pool.capacity),   # OOB pad -> dropped
-            pad(cols["rho_v"]), np.int32(self._minsup),
-            lu=lu, lv=lv, early_stop=self.early_stop, backend=self.backend)
+        out_slot, child_len, support, cmps, checks, alive = \
+            ops.nlist_presize(
+                pool.codes, pad(u_off), pad(u_len), pad(v_off), pad(v_len),
+                pad(cols["rho_v"]), np.int32(self._minsup),
+                lu=lu, lv=lv, early_stop=self.early_stop,
+                backend=self.backend)
         stats.device_calls += 1
         child_len = np.asarray(child_len[:n])
         support = np.asarray(support[:n])
@@ -193,18 +216,32 @@ class DevicePrePost:
         stats.comparisons += int(np.asarray(cmps[:n]).sum())
         if self.early_stop:
             # One ES bound evaluation per skipped V code — exactly the
-            # oracle's es_checks (the non-ES merge evaluates none).
+            # oracle's es_checks, and aborts are only attributed when
+            # the guard was actually armed (the non-ES merge must
+            # report zero deaths).
             stats.es_checks += int(np.asarray(checks[:n]).sum())
-        stats.es_aborts += int((~alive).sum())
+            stats.es_aborts += int((~alive).sum())
 
         freq = support >= self._minsup   # aborted pairs report support 0
-        pool.free_rows(child_rows[~freq])
-        results: List[Tuple[int, int, int, Any]] = []
-        for b in np.nonzero(freq)[0]:
-            pool.set_length(child_rows[b], child_len[b])
-            results.append((int(b), int(child_rows[b]), int(support[b]),
-                            int(child_len[b])))
-        return results
+        kept = np.nonzero(freq)[0]
+        if kept.size == 0:
+            return []
+
+        # Tight, survivor-only child extents (allocation may grow the
+        # slab, so offsets are resolved after it; live extents and the
+        # pre-pass offsets above are stable across growth).
+        child_rows = pool.alloc_rows(child_len[kept])
+        out_off = np.full(n, pool.capacity, np.int32)   # default: dropped
+        out_off[kept] = pool.offsets(child_rows)
+        pool.codes, _ = ops.nlist_scatter(
+            pool.codes, out_slot, pad(u_off), pad(u_len), pad(v_off),
+            pad(v_len), pad(out_off, fill=pool.capacity),
+            lu=lu, lv=lv, backend=self.backend)
+        stats.device_calls += 1
+        stats.child_scatters += int(kept.size)
+        stats.scatter_words += 3 * int(child_len[kept].sum())
+        return [(int(b), int(row), int(support[b]), int(child_len[b]))
+                for b, row in zip(kept, child_rows)]
 
     def make_class(self, parent: ClassNode,
                    children: List[Child]) -> ClassNode:
@@ -227,13 +264,13 @@ class DevicePrePost:
         compaction (offsets are indirected through the host tables), so
         the scheduler never needs to remap — always returns None.
 
-        ``reserve`` arrives as a pair count; the next drain group
-        allocates one pessimistic child extent per pair, each bounded by
-        its parents, so the mean live extent size converts it into code
-        triples.  Without this headroom a compaction would shrink to
-        tight mass and the very next chunk would regrow the slab
-        (compact/grow thrash); the would-halve hysteresis absorbs the
-        estimate's error."""
+        ``reserve`` arrives as the WHOLE drain group's pair count
+        (ISSUE 5: a group's chunks allocate children cumulatively, so
+        reserving one chunk's worth caused compact/grow thrash).  Child
+        extents are now tight (exact lengths, survivors only), so the
+        mean live extent size converts pairs into a *generous* code
+        estimate; the would-halve hysteresis absorbs the remaining
+        error."""
         pool = self._pool
         avg_extent = pool.live_codes // max(pool.n_live_rows, 1)
         pool.compact_if_sparse(self.compact_occupancy,

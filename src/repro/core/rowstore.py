@@ -38,10 +38,18 @@ the freed capacity back.  Row-store compaction *renumbers* slots and
 returns an old->new mapping the frontier scheduler applies to every
 live handle; N-list pool compaction keeps row ids stable (offsets are
 indirected through the host tables) and additionally shrinks each
-extent to the bucket of its *actual* length, undoing the pessimistic
-``min(|U|, |V|)`` allocation.  Both engines trigger compaction only at
-drain-group boundaries (``core.frontier``), the one point where the
-live row set is exactly the frontier.
+extent to the bucket of its *actual* length.  Both engines trigger
+compaction only at drain-group boundaries (``core.frontier``), the one
+point where the live row set is exactly the frontier.
+
+Materialization is survivor-only since ISSUE 5: the fused dispatches
+write a child row / extent only when its support cleared minsup, so a
+freed slot of a dead candidate was never written (pure host
+bookkeeping), and the N-list engine allocates child extents from the
+pre-pass's *exact* lengths — the pessimistic ``min(|U|, |V|)`` extents
+that compaction used to re-bucket away no longer exist, leaving
+re-bucketing as a defragmentation detail (level-1 uploads and
+``set_length`` users still benefit).
 """
 
 from __future__ import annotations

@@ -112,12 +112,12 @@ def gen_dense_tabular(n_trans: int = 1000, n_cols: int = 12,
     rng = np.random.default_rng(seed)
     db: Database = []
     col_dists = []
-    for c in range(n_cols):
+    for _c in range(n_cols):
         w = rng.pareto(skew, vals_per_col) + 0.2
         col_dists.append(w / w.sum())
     class_vals = rng.integers(0, vals_per_col, size=(n_classes, n_cols))
     class_p = rng.dirichlet(np.full(n_classes, 2.0))
-    for t in range(n_trans):
+    for _t in range(n_trans):
         k = rng.choice(n_classes, p=class_p)
         row = []
         for c in range(n_cols):

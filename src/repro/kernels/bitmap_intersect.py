@@ -37,7 +37,14 @@ scatter behind, so that one ``pallas_call`` plus its surrounding
 gather/scatter lowers to ONE device dispatch per pair chunk and all row
 traffic stays in HBM/VMEM.  The block-0 iteration of the while_loop IS
 the old one-block screen (the bound after block 0 equals the screen
-bound), which is why no separate screen kernel exists anymore.
+bound), which is why no separate screen kernel exists anymore.  The
+scatter half of that contract is **survivor-only** (ISSUE 5): the
+kernel's count/alive outputs are produced first and gate the scatter —
+a pair this kernel killed (or that finished below minsup) has its
+child-slot write dropped, on both the Pallas and jnp backends, so dead
+candidates stop consuming scatter bandwidth the same way they already
+stopped consuming VPU cycles.  Inside the kernel nothing changes: the
+while_loop already writes only the blocks it actually processed.
 """
 
 from __future__ import annotations

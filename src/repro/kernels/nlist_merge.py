@@ -13,11 +13,18 @@ construction — PrePost+'s selling point — so the bucketed ``(1, L)``
 rows are tiny VMEM residents.
 
 Semantics are defined by ``kernels/ref.py::_nl_merge_vmapped`` (the body
-of ``nlist_intersect_ref`` / ``nlist_extend_ref``) and must match it
-bit-for-bit; tests/test_kernels.py sweeps shapes, lengths, ES on/off and
-minsup values.  The surrounding gather / Z-merge / scatter of the fused
-dispatch stay in jnp around this kernel (``ops.nlist_extend``) so the
-whole extension is still ONE device dispatch per pair chunk.
+of ``nlist_intersect_ref`` / ``nlist_presize_ref`` /
+``nlist_extend_ref``) and must match it bit-for-bit;
+tests/test_kernels.py sweeps shapes, lengths, ES on/off and minsup
+values.  On the mining hot path this kernel is the merge phase of the
+*pre-pass* dispatch (``ops.nlist_presize``, ISSUE 5): its match table
+stays on device while the host allocates tight extents for the
+surviving children only, and the separate scatter dispatch
+(``ops.nlist_scatter``) Z-merges it into the pool — the merge loop
+runs exactly once per candidate, and dead candidates are never
+scattered.  The one-dispatch composition (``ops.nlist_extend``, same
+kernel, survivor-gated scatter fused behind it) remains the
+micro-bench API.
 """
 
 from __future__ import annotations

@@ -58,30 +58,41 @@ def bitmap_intersect_es(U, V, suffix_u, suffix_v, rho_parent, minsup,
                                         rho_parent, minsup, mode=mode)
 
 
+# ``es_minsup`` (the scan-abort threshold: the real minsup, or 0 = ES
+# disabled) is a TRACED scalar, separate from the scatter-gate
+# ``minsup``, so the ES-on and ES-off paths share one compiled kernel
+# per shape — a static flag here would double every jit cache entry.
 @functools.partial(jax.jit, static_argnames=("mode", "backend"),
                    donate_argnums=(0, 1))
 def _screen_and_intersect_impl(rows, suffix, ua, vb, slots, rho_parent,
-                               minsup, *, mode: str, backend: str):
+                               minsup, es_minsup, *, mode: str,
+                               backend: str):
     U = jnp.take(rows, ua, axis=0)
     V = jnp.take(rows, vb, axis=0)
     su = jnp.take(suffix, ua, axis=0)
     sv = jnp.take(suffix, vb, axis=0)
     if backend == "pallas":
         Z, cnt, blocks, alive = _pallas_bitmap(
-            U, V, su, sv, rho_parent, minsup, mode=mode,
+            U, V, su, sv, rho_parent, es_minsup, mode=mode,
             interpret=not _on_tpu())
     else:
         Z, cnt, blocks, alive = _ref.bitmap_intersect_es_ref(
-            U, V, su, sv, rho_parent, minsup, mode=mode)
+            U, V, su, sv, rho_parent, es_minsup, mode=mode)
+    # Survivor-only scatter (ISSUE 5): the count phase above completes
+    # before the scatter phase, and gates it — non-survivors' slots are
+    # redirected out of range so ``mode="drop"`` discards their writes
+    # together with the pair padding.
+    keep = _ref._survivor_mask(cnt, alive, rho_parent, minsup, mode=mode)
+    slots_eff = jnp.where(keep, slots, jnp.int32(rows.shape[0]))
     child_suffix = _suffix_popcounts(Z)
-    # Out-of-range slots (pair padding / discarded children) are dropped.
-    rows = rows.at[slots].set(Z, mode="drop")
-    suffix = suffix.at[slots].set(child_suffix, mode="drop")
+    rows = rows.at[slots_eff].set(Z, mode="drop")
+    suffix = suffix.at[slots_eff].set(child_suffix, mode="drop")
     return rows, suffix, cnt, blocks, alive
 
 
 def screen_and_intersect(rows, suffix, ua, vb, slots, rho_parent, minsup,
-                         *, mode: str = "and", backend: str = "auto",
+                         *, mode: str = "and", early_stop: bool = True,
+                         backend: str = "auto",
                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
                                     jnp.ndarray, jnp.ndarray]:
     """Fused screen + blocked ES intersection over a device row store.
@@ -90,20 +101,26 @@ def screen_and_intersect(rows, suffix, ua, vb, slots, rho_parent, minsup,
     by index from the store, runs the blocked early-stopping intersection
     (block-0 screen included — see ``ref.screen_and_intersect_ref``),
     computes child suffix-popcount tables on device and scatters both into
-    the store at ``slots``.
+    the store at ``slots`` — **survivor-only**: a child row is written
+    only when its support clears ``minsup`` (and, under ES, the pair
+    finished its scan alive), so dead candidates cost zero scatter words.
+    ``early_stop=False`` disables the in-scan abort but keeps the
+    frequency gate (``minsup`` must always be the real threshold).
 
     ``rows``/``suffix`` buffers are DONATED: callers must replace their
     handles with the returned arrays.  Returns
     ``(rows, suffix, counts, blocks_done, alive)`` where
-    ``rows[slots[i]]`` holds child ``Z_i`` (bit-exact vs the ref) and
-    ``suffix[slots[i]]`` its suffix table.  Slots ``>= capacity`` are
-    dropped (used for padding).
+    ``rows[slots[i]]`` holds child ``Z_i`` for surviving pairs (bit-exact
+    vs the ref) and ``suffix[slots[i]]`` its suffix table.  Slots of
+    non-survivors and slots ``>= capacity`` (padding) are untouched.
     """
     b = _resolve(backend)
+    minsup = jnp.asarray(minsup, jnp.int32)
+    es_minsup = minsup if early_stop else jnp.int32(0)
     return _screen_and_intersect_impl(
         rows, suffix, jnp.asarray(ua, jnp.int32), jnp.asarray(vb, jnp.int32),
         jnp.asarray(slots, jnp.int32), jnp.asarray(rho_parent, jnp.int32),
-        jnp.asarray(minsup, jnp.int32), mode=mode, backend=b)
+        minsup, es_minsup, mode=mode, backend=b)
 
 
 @functools.lru_cache(maxsize=None)
@@ -115,10 +132,14 @@ def make_screen_and_intersect_sharded(mesh: Mesh,
     shard-local in-dispatch block ES added by ISSUE 4).
 
     Returns a jitted shard_map program
-    ``fused(rows, suffix, ua, vb, slots, rho_parent, minsup) ->
-    (rows, suffix, bound, count, blocks, alive)`` that is bit-exact
-    against ``ref.screen_and_intersect_sharded_ref`` with ``n_shards`` =
-    the product of ``tid_axes`` sizes.  Layouts (``DeviceRowStore``
+    ``fused(rows, suffix, ua, vb, slots, rho_parent, minsup,
+    n_real_blocks=None) -> (rows, suffix, bound, count, blocks,
+    alive)`` that is bit-exact against
+    ``ref.screen_and_intersect_sharded_ref`` with ``n_shards`` = the
+    product of ``tid_axes`` sizes.  ``n_real_blocks`` is the unpadded
+    block count: each shard's scan count is clamped to its real blocks
+    so ``blocks`` (the word_ops numerator) never charges the all-zero
+    pad tail the store adds to divide the shard count.  Layouts (``DeviceRowStore``
     sharded mode): ``rows uint32 (cap, nb, bw)`` block-sharded over
     ``tid_axes``; ``suffix int32 (cap, n_shards*(nb_local+1))``
     column-sharded so each shard owns its local suffix table; pair
@@ -132,8 +153,11 @@ def make_screen_and_intersect_sharded(mesh: Mesh,
     like the single-device path once it has *proven* the pair globally
     infrequent — see the ref docstring for the bound), then one fused
     psum of the per-shard ``(count, blocks, dead, screen-bound)``
-    vectors and a shard-local child scatter.  ``rows``/``suffix`` are
-    DONATED: callers must replace their handles.
+    vectors and a **survivor-only** shard-local child scatter: the psum
+    completes before the scatter phase and gates it, so candidates
+    whose global support misses minsup (or that any shard aborted)
+    cost zero scatter words.  ``rows``/``suffix`` are DONATED: callers
+    must replace their handles.
     """
     if mode not in ("and", "andnot"):
         raise ValueError(f"bad mode {mode!r}")
@@ -143,7 +167,7 @@ def make_screen_and_intersect_sharded(mesh: Mesh,
     suffix_spec = P(None, tid_spec)
     vec = P(None)
 
-    def fused(rows, suffix, ua, vb, slots, rho_parent, minsup):
+    def fused(rows, suffix, ua, vb, slots, rho_parent, minsup, n_real):
         # Local shapes: rows (cap, nb_local, bw), suffix (cap, nb_local+1).
         n = ua.shape[0]
         U = jnp.take(rows, ua, axis=0)
@@ -164,6 +188,17 @@ def make_screen_and_intersect_sharded(mesh: Mesh,
 
         Z, cnt, blocks, alive = _ref._blocked_es_scan(
             U, V, su, sv, rho, thr, mode=mode)
+        # Discount this shard's all-zero pad tail from the scan count
+        # (the store pads the block axis to the shard count; pads never
+        # change counts or aliveness) so the psum'd ``blocks`` — the
+        # word_ops numerator — is consistently unpadded.
+        nbl = rows.shape[1]
+        sidx = jnp.int32(0)
+        for ax in tid_axes:
+            sidx = sidx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        real_local = jnp.clip(n_real.astype(jnp.int32) - sidx * nbl,
+                              0, nbl)
+        blocks = jnp.minimum(blocks, real_local)
         zpc = _popcount32(Z).sum(axis=-1)           # (n, nb_local)
         c0 = zpc[:, 0]
         if mode == "and":
@@ -176,26 +211,37 @@ def make_screen_and_intersect_sharded(mesh: Mesh,
             bound = rho - bound
         alive_g = dead == 0
 
+        # Survivor-only shard-local scatter (ISSUE 5): the psum above is
+        # the extra in-dispatch dependency edge — every shard knows the
+        # global count/alive before its scatter, so dead candidates'
+        # child rows are never written (slots redirected out of range,
+        # like the pair padding).
+        keep = _ref._survivor_mask(count, alive_g, rho, minsup, mode=mode)
+        slots_eff = jnp.where(keep, slots, jnp.int32(rows.shape[0]))
         child_suffix = jnp.concatenate(
             [jnp.cumsum(zpc[:, ::-1], axis=-1)[:, ::-1],
              jnp.zeros((zpc.shape[0], 1), jnp.int32)], axis=-1)
-        rows = rows.at[slots].set(Z, mode="drop")
-        suffix = suffix.at[slots].set(child_suffix, mode="drop")
+        rows = rows.at[slots_eff].set(Z, mode="drop")
+        suffix = suffix.at[slots_eff].set(child_suffix, mode="drop")
         return rows, suffix, bound, count, blocks, alive_g
 
     mapped = _shard_map(
         fused, mesh=mesh,
-        in_specs=(rows_spec, suffix_spec, vec, vec, vec, vec, P()),
+        in_specs=(rows_spec, suffix_spec, vec, vec, vec, vec, P(), P()),
         out_specs=(rows_spec, suffix_spec, vec, vec, vec, vec),
         check_rep=False)
     jitted = jax.jit(mapped, donate_argnums=(0, 1))
 
-    def dispatch(rows, suffix, ua, vb, slots, rho_parent, minsup):
+    def dispatch(rows, suffix, ua, vb, slots, rho_parent, minsup,
+                 n_real_blocks=None):
+        if n_real_blocks is None:       # no padding: every block is real
+            n_real_blocks = rows.shape[1]
         return jitted(rows, suffix,
                       jnp.asarray(ua, jnp.int32), jnp.asarray(vb, jnp.int32),
                       jnp.asarray(slots, jnp.int32),
                       jnp.asarray(rho_parent, jnp.int32),
-                      jnp.asarray(minsup, jnp.int32))
+                      jnp.asarray(minsup, jnp.int32),
+                      jnp.asarray(n_real_blocks, jnp.int32))
 
     return dispatch
 
@@ -319,25 +365,39 @@ def nlist_intersect(u_pre, u_post, u_freq, v_pre, v_post, v_freq,
                                     early_stop=early_stop)
 
 
+def _nl_merge_backend(codes, u_off, u_len, v_off, v_len, rho_v, minsup,
+                      *, lu, lv, early_stop, backend):
+    """Shared gather + two-pointer-merge body of the N-list dispatches."""
+    u_pre, u_post, u_freq = _ref._nl_gather(codes, u_off, u_len, lu)
+    v_pre, v_post, v_freq = _ref._nl_gather(codes, v_off, v_len, lv)
+    if backend == "pallas":
+        from .nlist_merge import nlist_merge as _pallas_merge
+        merged = _pallas_merge(
+            u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+            u_len, v_len, rho_v, minsup, early_stop=early_stop,
+            interpret=not _on_tpu())
+    else:
+        merged = _ref._nl_merge_vmapped(
+            u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+            u_len, v_len, rho_v, minsup, early_stop=early_stop)
+    return merged, u_freq, v_pre, v_post
+
+
 @functools.partial(jax.jit,
                    static_argnames=("lu", "lv", "early_stop", "backend"),
                    donate_argnums=(0,))
 def _nlist_extend_impl(codes, u_off, u_len, v_off, v_len, out_off, rho_v,
                        minsup, *, lu, lv, early_stop, backend):
-    u_pre, u_post, u_freq = _ref._nl_gather(codes, u_off, u_len, lu)
-    v_pre, v_post, v_freq = _ref._nl_gather(codes, v_off, v_len, lv)
-    if backend == "pallas":
-        from .nlist_merge import nlist_merge as _pallas_merge
-        out_slot, support, cmps, checks, alive = _pallas_merge(
-            u_pre, u_post, u_freq, v_pre, v_post, v_freq,
-            u_len, v_len, rho_v, minsup, early_stop=early_stop,
-            interpret=not _on_tpu())
-    else:
-        out_slot, support, cmps, checks, alive = _ref._nl_merge_vmapped(
-            u_pre, u_post, u_freq, v_pre, v_post, v_freq,
-            u_len, v_len, rho_v, minsup, early_stop=early_stop)
+    merged, u_freq, v_pre, v_post = _nl_merge_backend(
+        codes, u_off, u_len, v_off, v_len, rho_v, minsup,
+        lu=lu, lv=lv, early_stop=early_stop, backend=backend)
+    out_slot, support, cmps, checks, alive = merged
+    # Survivor-only scatter: aborted pairs report support 0, so one
+    # frequency gate covers both ES deaths and plain infrequency.
+    keep = support >= minsup
+    out_off_eff = jnp.where(keep, out_off, jnp.int32(codes.shape[0]))
     codes, child_len = _ref._nl_zmerge_scatter(
-        codes, out_slot, u_freq, v_pre, v_post, out_off)
+        codes, out_slot, u_freq, v_pre, v_post, out_off_eff)
     return codes, child_len, support, cmps, checks, alive
 
 
@@ -353,7 +413,11 @@ def nlist_extend(codes, u_off, u_len, v_off, v_len, out_off, rho_v, minsup,
     ``ref.nlist_extend_ref``, comparison counts exactly the oracle's),
     Z-merges consecutive same-ancestor slots on device and scatters the
     compacted child N-lists back into the pool at ``out_off`` — no host
-    N-list materialisation between levels.
+    N-list materialisation between levels.  The scatter is
+    **survivor-only** (ISSUE 5): pairs whose support misses minsup write
+    nothing.  The mining hot path uses the two-dispatch split
+    (:func:`nlist_presize` + :func:`nlist_scatter`) for exact-length
+    extents; this one-dispatch form remains the micro-bench API.
 
     ``codes`` is DONATED: callers must replace their handle with the
     returned slab.  Returns
@@ -366,3 +430,71 @@ def nlist_extend(codes, u_off, u_len, v_off, v_len, out_off, rho_v, minsup,
         jnp.asarray(out_off, jnp.int32), jnp.asarray(rho_v, jnp.int32),
         jnp.asarray(minsup, jnp.int32), lu=lu, lv=lv,
         early_stop=early_stop, backend=b)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lu", "lv", "early_stop", "backend"))
+def _nlist_presize_impl(codes, u_off, u_len, v_off, v_len, rho_v,
+                        minsup, *, lu, lv, early_stop, backend):
+    merged, _, _, _ = _nl_merge_backend(
+        codes, u_off, u_len, v_off, v_len, rho_v, minsup,
+        lu=lu, lv=lv, early_stop=early_stop, backend=backend)
+    out_slot, support, cmps, checks, alive = merged
+    _, _, child_len = _ref._nl_group_starts(out_slot)
+    return out_slot, child_len, support, cmps, checks, alive
+
+
+def nlist_presize(codes, u_off, u_len, v_off, v_len, rho_v, minsup,
+                  *, lu: int, lv: int, early_stop: bool = True,
+                  backend: str = "auto"):
+    """Merge-only pre-pass of the two-dispatch PrePost+ extension
+    (ISSUE 5 tentpole; pinned by ``ref.nlist_presize_ref``).
+
+    Runs the gather + two-pointer ES merge and the Z-merge group count
+    but NO scatter: the host learns each candidate's exact child length,
+    support and aliveness, allocates tight extents for the survivors
+    only, and hands the device-resident ``out_slot`` match table to
+    :func:`nlist_scatter` — the merge loop runs exactly once per
+    candidate, and the pool never holds a pessimistic
+    ``min(|U|, |V|)`` extent again.  ``codes`` is NOT donated (the
+    pre-pass only reads the slab).
+
+    Returns ``(out_slot, child_len, support, comparisons, checks,
+    alive)``."""
+    b = _resolve(backend)
+    return _nlist_presize_impl(
+        codes, jnp.asarray(u_off, jnp.int32), jnp.asarray(u_len, jnp.int32),
+        jnp.asarray(v_off, jnp.int32), jnp.asarray(v_len, jnp.int32),
+        jnp.asarray(rho_v, jnp.int32), jnp.asarray(minsup, jnp.int32),
+        lu=lu, lv=lv, early_stop=early_stop, backend=b)
+
+
+@functools.partial(jax.jit, static_argnames=("lu", "lv"),
+                   donate_argnums=(0,))
+def _nlist_scatter_impl(codes, out_slot, u_off, u_len, v_off, v_len,
+                        out_off, *, lu, lv):
+    _, _, u_freq = _ref._nl_gather(codes, u_off, u_len, lu)
+    v_pre, v_post, _ = _ref._nl_gather(codes, v_off, v_len, lv)
+    return _ref._nl_zmerge_scatter(codes, out_slot, u_freq, v_pre, v_post,
+                                   out_off)
+
+
+def nlist_scatter(codes, out_slot, u_off, u_len, v_off, v_len, out_off,
+                  *, lu: int, lv: int, backend: str = "auto"):
+    """Scatter pass of the two-dispatch PrePost+ extension (pinned by
+    ``ref.nlist_scatter_ref``).
+
+    Re-gathers the operand codes (no merge loop), Z-merges the
+    :func:`nlist_presize` match table and scatters the compacted child
+    N-lists into their tight extents at ``out_off``; callers pass
+    ``out_off >= capacity`` for non-survivors and padding, which makes
+    the scatter survivor-only by construction.  Gather/Z-merge/scatter
+    are pure vectorized jnp on every backend.  ``codes`` is DONATED:
+    callers must replace their handle.  Returns ``(codes, child_len)``.
+    """
+    del backend
+    return _nlist_scatter_impl(
+        codes, jnp.asarray(out_slot, jnp.int32),
+        jnp.asarray(u_off, jnp.int32), jnp.asarray(u_len, jnp.int32),
+        jnp.asarray(v_off, jnp.int32), jnp.asarray(v_len, jnp.int32),
+        jnp.asarray(out_off, jnp.int32), lu=lu, lv=lv)

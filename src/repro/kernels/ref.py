@@ -15,7 +15,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitmap import popcount32, NL_SENTINEL as _NL
+from repro.core.bitmap import (popcount32, suffix_popcounts,
+                               NL_SENTINEL as _NL)
 
 # ---------------------------------------------------------------------------
 # Blocked early-stopping bitmap intersection (Eclat "and" / dEclat "andnot")
@@ -97,18 +98,35 @@ def bitmap_intersect_es_ref(
                             mode=mode)
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
+def _survivor_mask(cnt, alive, rho_parent, minsup, *, mode: str):
+    """The scatter gate shared by every fused dispatch (ISSUE 5).
+
+    A pair's child is materialised iff its exact support clears minsup
+    AND it finished its scan alive — a dead pair's count is a frozen
+    partial, which in "andnot" mode *overestimates* the support
+    (``rho - cnt``), so aliveness is load-bearing, not an optimisation.
+    With ES disabled ``alive`` is identically True and the mask reduces
+    to plain frequency."""
+    support = cnt if mode == "and" else rho_parent.astype(jnp.int32) - cnt
+    return jnp.logical_and(alive, support >= jnp.asarray(minsup, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "early_stop"))
 def screen_and_intersect_ref(
     rows: jnp.ndarray,         # uint32 (capacity, n_blocks, bw) row store
     suffix: jnp.ndarray,       # int32  (capacity, n_blocks + 1)
     ua: jnp.ndarray,           # int32  (n_pairs,)  U operand row indices
     vb: jnp.ndarray,           # int32  (n_pairs,)  V operand row indices
+    slots: jnp.ndarray,        # int32  (n_pairs,)  child dest rows (OOB drop)
     rho_parent: jnp.ndarray,   # int32  (n_pairs,)
-    minsup: jnp.ndarray,       # int32  scalar; <= 0 disables ES
+    minsup: jnp.ndarray,       # int32  scalar (ES threshold AND scatter gate)
     *,
     mode: str = "and",
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Fused screen + blocked ES intersection over a device row store.
+    early_stop: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
+    """Fused screen + blocked ES intersection over a device row store —
+    the full single-device dispatch oracle, scatter included.
 
     Operands are *gathered by row index* from ``rows``/``suffix`` instead of
     being materialised by the host.  The one-block screen of the old
@@ -118,15 +136,31 @@ def screen_and_intersect_ref(
     changes the dispatch count, never the semantics: a screened-out pair is
     simply one that dies with ``blocks_done == 1``.
 
-    Returns ``(Z, counts, blocks_done, alive)`` with the exact semantics of
-    :func:`bitmap_intersect_es_ref` applied to the gathered operands.
+    The child scatter is **survivor-only** (ISSUE 5): the count phase of
+    the dispatch completes first and gates the scatter phase — a child
+    row and its suffix table are written at ``slots[i]`` only when pair
+    ``i``'s support clears ``minsup`` (and, under ES, it finished its
+    scan alive).  Dead candidates cost zero scatter words; their slots
+    (and slots ``>= capacity`` — pair padding) are left untouched.
+    ``early_stop=False`` disables the in-scan abort but NOT the
+    frequency gate.
+
+    Returns ``(rows, suffix, counts, blocks_done, alive)``.
     """
     U = jnp.take(rows, ua, axis=0)
     V = jnp.take(rows, vb, axis=0)
     su = jnp.take(suffix, ua, axis=0)
     sv = jnp.take(suffix, vb, axis=0)
-    return bitmap_intersect_es_ref(U, V, su, sv, rho_parent, minsup,
-                                   mode=mode)
+    es_minsup = minsup if early_stop else jnp.int32(0)
+    Z, cnt, blocks, alive = bitmap_intersect_es_ref(
+        U, V, su, sv, rho_parent, es_minsup, mode=mode)
+    keep = _survivor_mask(cnt, alive, rho_parent, minsup, mode=mode)
+    cap = rows.shape[0]
+    slots_eff = jnp.where(keep, slots, jnp.int32(cap))
+    child_suffix = suffix_popcounts(Z)
+    rows = rows.at[slots_eff].set(Z, mode="drop")
+    suffix = suffix.at[slots_eff].set(child_suffix, mode="drop")
+    return rows, suffix, cnt, blocks, alive
 
 
 @functools.partial(jax.jit,
@@ -139,6 +173,7 @@ def screen_and_intersect_sharded_ref(
     slots: jnp.ndarray,        # int32  (n_pairs,)  child dest rows (OOB drop)
     rho_parent: jnp.ndarray,   # int32  (n_pairs,)  parent support ("andnot")
     minsup: jnp.ndarray,       # int32  scalar (in-dispatch ES threshold)
+    n_real_blocks=None,        # int32  scalar: unpadded block count
     *,
     n_shards: int,
     mode: str = "and",
@@ -179,15 +214,25 @@ def screen_and_intersect_sharded_ref(
       ``thr_s = minsup`` with no slack term.
 
     and scatters the child rows plus their per-shard suffix tables into
-    the store at ``slots`` (slots ``>= capacity`` are dropped — pair
-    padding / discarded children).  A pair whose ``bound`` misses
-    minsup, or that any shard aborted, is provably infrequent; the host
-    never materialises its class.
+    the store at ``slots`` — **survivor-only** (ISSUE 5): the psum'd
+    count/alive phase of the dispatch completes first and gates the
+    shard-local scatter phase, so a child is written only when its
+    exact global support clears minsup and every shard finished its
+    scan alive.  A pair whose ``bound`` misses minsup, or that any
+    shard aborted, is provably infrequent: it costs zero scatter words
+    and the host never materialises its class (its slot, like slots
+    ``>= capacity`` — pair padding — is left untouched).
 
     Returns ``(rows, suffix, bound, count, blocks, alive)`` where
-    ``blocks`` is the total local blocks actually scanned across shards
-    (the distributed word-op numerator) and ``alive`` is True iff every
-    shard finished its scan alive.
+    ``blocks`` is the total *real* local blocks scanned across shards —
+    the distributed word-op numerator.  The store pads its block axis up
+    to the shard count, and a viable pair scans its shard's all-zero
+    pad tail (pads can never change counts or aliveness: their operand
+    mass is zero); ``n_real_blocks`` (default: no padding) lets the
+    dispatch clamp each shard's scan count to its real blocks, so
+    ``word_ops`` and ``word_ops_full`` are consistently unpadded and
+    an ES-off run reports exactly ``word_ops == word_ops_full``.
+    ``alive`` is True iff every shard finished its scan alive.
     """
     if mode not in ("and", "andnot"):
         raise ValueError(f"bad mode {mode!r}")
@@ -220,7 +265,16 @@ def screen_and_intersect_sharded_ref(
     Z = Zf.reshape(n_pairs, n_shards, nbl, bw)
     zpc = popcount32(Z).sum(axis=-1)                # (n, S, nbl)
     count = cnt_f.reshape(n_pairs, n_shards).sum(axis=1)
-    blocks = blocks_f.reshape(n_pairs, n_shards).sum(axis=1)
+    if n_real_blocks is None:
+        n_real_blocks = nb
+    # Pad blocks live at each tail shard's local END (the global pad is
+    # the tail of the block axis), so clamping a shard's scan count to
+    # its real-block count discounts them exactly.
+    real_local = jnp.clip(
+        jnp.asarray(n_real_blocks, jnp.int32)
+        - jnp.arange(n_shards, dtype=jnp.int32) * nbl, 0, nbl)
+    blocks = jnp.minimum(blocks_f.reshape(n_pairs, n_shards),
+                         real_local[None, :]).sum(axis=1)
     alive = alive_f.reshape(n_pairs, n_shards).all(axis=1)
     c0 = zpc[:, :, 0]                               # (n, S) per-shard block 0
     if mode == "and":
@@ -228,12 +282,14 @@ def screen_and_intersect_sharded_ref(
     else:
         bound = rho_parent.astype(jnp.int32) - c0.sum(axis=1)
 
+    keep = _survivor_mask(count, alive, rho_parent, minsup, mode=mode)
+    slots_eff = jnp.where(keep, slots, jnp.int32(cap))
     child_suffix = jnp.concatenate(
         [jnp.cumsum(zpc[:, :, ::-1], axis=-1)[:, :, ::-1],
          jnp.zeros((n_pairs, n_shards, 1), jnp.int32)],
         axis=-1).reshape(n_pairs, n_shards * (nbl + 1))
-    rows = rows.at[slots].set(Z.reshape(n_pairs, nb, bw), mode="drop")
-    suffix = suffix.at[slots].set(child_suffix, mode="drop")
+    rows = rows.at[slots_eff].set(Z.reshape(n_pairs, nb, bw), mode="drop")
+    suffix = suffix.at[slots_eff].set(child_suffix, mode="drop")
     return rows, suffix, bound, count, blocks, alive
 
 
@@ -439,28 +495,37 @@ def _nl_gather(codes, off, length, width: int):
     return pre, post, freq
 
 
-def _nl_zmerge_scatter(codes, out_slot, u_freq, v_pre, v_post, out_off):
-    """Device Z-merge (Alg. 3 line 31) + child scatter into the pool.
-
-    Consecutive U slots matching the same V ancestor code are one child
-    element whose frequency is the group's U-frequency mass.  ``out_slot``
-    is non-decreasing over matched slots (two-pointer order), so group
-    starts are exactly the positions where the slot value exceeds the
-    running maximum of previous matched slots.  Children are compacted to
-    the front of their extents at ``out_off`` (offsets past the slab
-    capacity are dropped — pair padding).
-
-    Returns ``(codes, child_len)``."""
-    P, Lu = out_slot.shape
-    cap = codes.shape[0]
+def _nl_group_starts(out_slot):
+    """Z-merge group detection (Alg. 3 line 31) shared by the scatter
+    and the presize pre-pass.  ``out_slot`` is non-decreasing over
+    matched slots (two-pointer order), so group starts are exactly the
+    positions where the slot value exceeds the running maximum of
+    previous matched slots.  Returns ``(valid, start, child_len)``."""
+    P, _ = out_slot.shape
     valid = out_slot != NL_SENTINEL
     js = jnp.where(valid, out_slot, -1)
     running = jax.lax.cummax(js, axis=1)
     prev = jnp.concatenate(
         [jnp.full((P, 1), -1, js.dtype), running[:, :-1]], axis=1)
     start = jnp.logical_and(valid, out_slot != prev)
-    gid = jnp.cumsum(start.astype(jnp.int32), axis=1) - 1
     child_len = jnp.sum(start.astype(jnp.int32), axis=1)
+    return valid, start, child_len
+
+
+def _nl_zmerge_scatter(codes, out_slot, u_freq, v_pre, v_post, out_off):
+    """Device Z-merge (Alg. 3 line 31) + child scatter into the pool.
+
+    Consecutive U slots matching the same V ancestor code are one child
+    element whose frequency is the group's U-frequency mass (see
+    :func:`_nl_group_starts`).  Children are compacted to the front of
+    their extents at ``out_off`` (offsets past the slab capacity are
+    dropped — pair padding / non-survivors).
+
+    Returns ``(codes, child_len)``."""
+    P, Lu = out_slot.shape
+    cap = codes.shape[0]
+    valid, start, child_len = _nl_group_starts(out_slot)
+    gid = jnp.cumsum(start.astype(jnp.int32), axis=1) - 1
 
     rows = jnp.broadcast_to(jnp.arange(P)[:, None], (P, Lu))
     # per-group U-frequency mass (scatter-add; invalid slots -> dropped)
@@ -479,6 +544,66 @@ def _nl_zmerge_scatter(codes, out_slot, u_freq, v_pre, v_post, out_off):
     child = jnp.stack([zpre, zpost, zfreq], axis=-1)
     codes = codes.at[dest].set(child, mode="drop")
     return codes, child_len
+
+
+@functools.partial(jax.jit, static_argnames=("lu", "lv", "early_stop"))
+def nlist_presize_ref(
+    codes: jnp.ndarray,        # int32 (capacity, 3) N-list pool slab
+    u_off: jnp.ndarray, u_len: jnp.ndarray,    # int32 (P,)
+    v_off: jnp.ndarray, v_len: jnp.ndarray,    # int32 (P,)
+    rho_v: jnp.ndarray,        # int32 (P,) sibling supports (ES bound)
+    minsup: jnp.ndarray,       # int32 scalar
+    *, lu: int, lv: int, early_stop: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray, jnp.ndarray]:
+    """Merge-only pre-pass: the bound/count phase of the PrePost+ class
+    extension WITHOUT the scatter (ISSUE 5 tentpole).
+
+    Gathers both operand N-lists by extent offset and runs the
+    two-pointer merge with the corrected ``z_mass + (rho_V - skip)`` ES
+    guard — comparison counts are exactly the oracle's — plus the
+    Z-merge group count, so the host learns each surviving child's
+    *exact* length (and support) before allocating its extent.  The
+    match table ``out_slot`` stays on device and feeds
+    :func:`nlist_scatter_ref`, which re-derives the Z-merge from it —
+    the merge loop runs exactly once per candidate.
+
+    Returns ``(out_slot, child_len, support, comparisons, checks,
+    alive)``; aborted pairs report support 0 (certified infrequent)."""
+    u_pre, u_post, u_freq = _nl_gather(codes, u_off, u_len, lu)
+    v_pre, v_post, v_freq = _nl_gather(codes, v_off, v_len, lv)
+    out_slot, support, cmps, checks, alive = _nl_merge_vmapped(
+        u_pre, u_post, u_freq, v_pre, v_post, v_freq,
+        u_len, v_len, rho_v, minsup, early_stop=early_stop)
+    _, _, child_len = _nl_group_starts(out_slot)
+    return out_slot, child_len, support, cmps, checks, alive
+
+
+@functools.partial(jax.jit, static_argnames=("lu", "lv"))
+def nlist_scatter_ref(
+    codes: jnp.ndarray,        # int32 (capacity, 3) N-list pool slab
+    out_slot: jnp.ndarray,     # int32 (P, lu) presize match table
+    u_off: jnp.ndarray, u_len: jnp.ndarray,    # int32 (P,)
+    v_off: jnp.ndarray, v_len: jnp.ndarray,    # int32 (P,)
+    out_off: jnp.ndarray,      # int32 (P,) child extents (OOB -> dropped)
+    *, lu: int, lv: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter pass of the two-dispatch PrePost+ extension (ISSUE 5).
+
+    Re-gathers the operand codes (cheap — no merge loop), Z-merges
+    consecutive same-ancestor slots of ``out_slot`` and scatters the
+    compacted child N-lists into the pool at ``out_off``.  Callers pass
+    ``out_off >= capacity`` for every non-survivor (and for pair
+    padding), so dead candidates cost zero scatter words and the pool
+    only ever receives children whose tight extents were allocated from
+    their exact pre-pass lengths.
+
+    ``lu``/``lv`` must be the presize dispatch's gather widths.
+    Returns ``(codes, child_len)``."""
+    _, _, u_freq = _nl_gather(codes, u_off, u_len, lu)
+    v_pre, v_post, _ = _nl_gather(codes, v_off, v_len, lv)
+    return _nl_zmerge_scatter(codes, out_slot, u_freq, v_pre, v_post,
+                              jnp.asarray(out_off, jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("lu", "lv", "early_stop"))
@@ -505,17 +630,29 @@ def nlist_extend_ref(
         core/oracle.py erratum note) — comparison counts are exactly the
         oracle's;
       * Z-merge consecutive same-ancestor slots on device and scatter the
-        compacted child N-lists into the pool at ``out_off``.
+        compacted child N-lists into the pool at ``out_off`` —
+        **survivor-only** (ISSUE 5): the merge phase completes first and
+        gates the scatter, so a child is written only when its support
+        clears minsup (aborted pairs report support 0, so ES deaths are
+        covered by the same gate).
+
+    The mining hot path uses the two-dispatch split
+    (:func:`nlist_presize_ref` + :func:`nlist_scatter_ref`) so extents
+    can be allocated from exact child lengths; this one-dispatch
+    composition remains the micro-bench / pessimistic-extent API.
 
     Returns ``(codes, child_len, support, comparisons, checks, alive)``;
-    aborted pairs report support 0 (certified infrequent) and their
-    partially written extents are recycled by the caller."""
+    non-survivors report ``child_len`` from the merge but scatter
+    nothing."""
     u_pre, u_post, u_freq = _nl_gather(codes, u_off, u_len, lu)
     v_pre, v_post, v_freq = _nl_gather(codes, v_off, v_len, lv)
     out_slot, support, cmps, checks, alive = _nl_merge_vmapped(
         u_pre, u_post, u_freq, v_pre, v_post, v_freq,
         u_len, v_len, rho_v, minsup, early_stop=early_stop)
+    keep = support >= jnp.asarray(minsup, jnp.int32)
+    cap = codes.shape[0]
+    out_off_eff = jnp.where(keep, jnp.asarray(out_off, jnp.int32),
+                            jnp.int32(cap))
     codes, child_len = _nl_zmerge_scatter(
-        codes, out_slot, u_freq, v_pre, v_post,
-        jnp.asarray(out_off, jnp.int32))
+        codes, out_slot, u_freq, v_pre, v_post, out_off_eff)
     return codes, child_len, support, cmps, checks, alive

@@ -136,7 +136,7 @@ def format_table(records: Dict[str, Dict]) -> str:
               "t_coll (ms) | bottleneck | useful-FLOPs | roofline frac |\n"
               "|---|---|---|---|---|---|---|---|---|\n")
     rows = []
-    for key, rec in sorted(records.items()):
+    for _key, rec in sorted(records.items()):
         if rec.get("skip_reason"):
             rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
                         f"| — | — | — | SKIP: {rec['skip_reason'][:40]}… "

@@ -126,7 +126,7 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None,
 
     paths = _flatten_with_paths(template)
     leaves = []
-    for name, leaf in paths:
+    for name, _leaf in paths:
         entry = by_path.get(name)
         if entry is None:
             raise KeyError(f"checkpoint missing leaf {name}")

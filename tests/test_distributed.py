@@ -91,7 +91,7 @@ def test_arch_rules_divisible_on_production_mesh():
         axis_names = ("data", "model")
         shape = {"data": 16, "model": 16}
 
-    for arch_id, spec in REGISTRY.items():
+    for _arch_id, spec in REGISTRY.items():
         if spec.family == "fim":
             continue
         with use_rules(spec.rules_override):
@@ -260,6 +260,7 @@ def test_unified_miner_one_fused_dispatch_per_chunk(monkeypatch):
 @pytest.mark.parametrize("es", [False, True])
 def test_unified_miner_matches_oracle_single_device(es):
     from repro.core.distributed import DistributedMiner
+    from repro.core.eclat import BitmapMiner
     from repro.core.oracle import mine
 
     mesh = _mesh11()
@@ -269,6 +270,15 @@ def test_unified_miner_matches_oracle_single_device(es):
         out, stats = DistributedMiner(mesh, early_stop=es, capacity=512,
                                       block_words=2).mine(db, minsup)
         assert out == expected, (seed, es)
+        # work + scatter telemetry is engine-invariant (ISSUE 5): the
+        # non-ES work baseline comes from the REAL block count and the
+        # survivor-only scatter count equals the frequent children
+        _, st1 = BitmapMiner(scheme="eclat", early_stop=es,
+                             block_words=2).mine(db, minsup)
+        assert stats.word_ops_full == st1.word_ops_full, (seed, es)
+        n_children = sum(1 for s in out if len(s) >= 2)
+        assert stats.child_scatters == st1.child_scatters == n_children
+        assert stats.scatter_words == st1.scatter_words, (seed, es)
         if es:
             # the distributed screen is attributed, even single-block
             assert stats.screened_out >= 0
@@ -295,8 +305,14 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
     mesh = make_mesh((4, 2), ("data", "model"))
 
     # unified miner == oracle on 8 devices, ES on/off, ONE fused dispatch
-    # per pair chunk (wrapped counter vs stats.device_calls)
+    # per pair chunk (wrapped counter vs stats.device_calls); work and
+    # scatter telemetry must be shard-count invariant (ISSUE 5):
+    # word_ops_full from the REAL block count (the 8-shard store pads
+    # its block axis, which used to inflate it) and child_scatters ==
+    # frequent children, equal to the single-device run on the same DB
+    from repro.core.eclat import BitmapMiner
     rng = random.Random(7)
+    nonzero_wof = 0
     for trial in range(4):
         n_items = rng.randint(4, 9)
         n_trans = rng.randint(10, 60)
@@ -305,6 +321,7 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
         db = [t for t in db if t]
         minsup = rng.randint(2, max(2, len(db) // 3))
         bf = mine_bruteforce(db, minsup)
+        n_children = sum(1 for s in bf if len(s) >= 2)
         for es in (False, True):
             m = DistributedMiner(mesh, early_stop=es, capacity=512,
                                  block_words=2)
@@ -317,6 +334,21 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
             out, st = m.mine(db, minsup)
             assert out == bf, (trial, es)
             assert calls[0] == st.device_calls >= 1, (trial, es)
+            assert st.child_scatters == n_children, (trial, es)
+            _, st1 = BitmapMiner(scheme="eclat", early_stop=es,
+                                 block_words=2).mine(db, minsup)
+            assert st.word_ops_full == st1.word_ops_full, (trial, es)
+            assert st.child_scatters == st1.child_scatters, (trial, es)
+            assert st.scatter_words == st1.scatter_words, (trial, es)
+            # the numerator is unpadded too: ES off scans exactly the
+            # real blocks, ES on never scans more (saved_frac >= 0)
+            if es:
+                assert st.word_ops <= st.word_ops_full, (trial, es)
+                assert st.word_ops_saved_frac >= 0.0, (trial, es)
+            else:
+                assert st.word_ops == st.word_ops_full, (trial, es)
+            nonzero_wof += st.word_ops_full > 0
+    assert nonzero_wof > 0      # the padding bug would have inflated these
 
     # fused dispatch is bit-exact against the 8-shard ref oracle,
     # in-dispatch shard-local ES on and off

@@ -226,6 +226,160 @@ def test_property_device_prepost_counts_equal_oracle(case):
 
 
 # ---------------------------------------------------------------------------
+# ISSUE 5: non-ES runs report zero deaths, and child materialization is
+# survivor-only (scatter telemetry == frequent children, not candidates)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_non_es_runs_report_zero_deaths_every_engine(regime):
+    """With early stopping disabled no engine may attribute an ES death
+    (the pre-ISSUE-5 PrePost+ path bumped ``es_aborts`` from the merge's
+    alive vector even when the guard was never armed)."""
+    from repro.core.distributed import DistributedMiner
+
+    for seed in range(3):
+        db, minsup = gen_db(regime, seed)
+        for scheme in ("eclat", "declat"):
+            _, st = mine_bitmap(db, minsup, scheme=scheme, early_stop=False,
+                                block_words=4)
+            assert st.deaths == 0, (regime, seed, scheme)
+            assert st.screened_out == 0 and st.kernel_aborts == 0
+        _, st = mine_prepost_device(db, minsup, early_stop=False)
+        assert st.deaths == 0 and st.es_aborts == 0, (regime, seed)
+        _, st = DistributedMiner(_mesh(), early_stop=False,
+                                 block_words=4).mine(db, minsup)
+        assert st.deaths == 0, (regime, seed, "distributed")
+
+
+def _n_children(out):
+    return sum(1 for s in out if len(s) >= 2)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_survivor_only_scatter_telemetry(backend):
+    """Child scatters == frequent children (NOT candidates) for every
+    engine on screened-out-heavy regimes, ES on and off, with outputs
+    still exact (ISSUE 5 acceptance).  The jnp and pallas(interpret)
+    backends gate identically; the 8-shard distributed check lives in
+    test_distributed.py's subprocess sweep."""
+    from repro.core.distributed import DistributedMiner
+
+    for regime in ("sparse", "powerlaw"):
+        for seed in range(3):
+            db, minsup = gen_db(regime, seed)
+            expected = mine_bruteforce(db, minsup)
+            for es in (False, True):
+                runs = {
+                    "bitmap-eclat": mine_bitmap(
+                        db, minsup, "eclat", early_stop=es, block_words=4,
+                        backend=backend),
+                    "bitmap-declat": mine_bitmap(
+                        db, minsup, "declat", early_stop=es, block_words=4,
+                        backend=backend),
+                    "device-prepost": mine_prepost_device(
+                        db, minsup, early_stop=es, backend=backend),
+                }
+                if backend == "jnp":     # shard_map path is jnp-only
+                    runs["distributed-eclat"] = DistributedMiner(
+                        _mesh(), early_stop=es, block_words=4,
+                        ).mine(db, minsup)
+                for name, (out, st) in runs.items():
+                    key = (regime, seed, es, name)
+                    assert out == expected, key
+                    assert st.child_scatters == _n_children(out), key
+                    assert st.child_scatters <= st.candidates, key
+                    if es and st.deaths:
+                        # dead candidates really were not materialised
+                        assert st.child_scatters < st.candidates, key
+
+
+def test_scatter_words_track_survivors_only():
+    """scatter_words is the exact device word cost of the materialised
+    children: rows * row_words for the bitmap engine (the tiny DBs here
+    pack into one 4-word block), 3 * sum(child lengths) for the N-list
+    engine — identical between the ES and non-ES run of the same DB
+    because both materialise exactly the frequent children."""
+    db, minsup = gen_db("powerlaw", 1)
+    out_es, st_es = mine_bitmap(db, minsup, "eclat", early_stop=True,
+                                block_words=4)
+    _, st_no = mine_bitmap(db, minsup, "eclat", early_stop=False,
+                           block_words=4)
+    assert st_es.child_scatters == st_no.child_scatters == _n_children(
+        out_es)
+    assert st_es.scatter_words == st_es.child_scatters * 1 * 4
+    assert st_es.scatter_words == st_no.scatter_words
+    p_out, p_st = mine_prepost_device(db, minsup, early_stop=True)
+    assert p_st.child_scatters == _n_children(p_out)
+    assert p_st.scatter_words % 3 == 0
+    assert p_st.scatter_words >= 3 * p_st.child_scatters
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 5: compaction reserve covers the whole drain group
+# ---------------------------------------------------------------------------
+
+def test_compaction_reserve_covers_whole_drain_group(monkeypatch):
+    """Forced compaction (threshold 1.0) on a DB big enough to grow the
+    slab: the scheduler must pass every ``maybe_compact`` the WHOLE
+    drain group's pair count as the reserve (the pre-ISSUE-5
+    ``min(total, pair_chunk)`` clamp under-reserved multi-chunk groups),
+    and consequently the allocator never grows between a compaction and
+    its group's last chunk (no compact->grow thrash)."""
+    import repro.core.eclat as E
+    from repro.data.transactions import gen_powerlaw_baskets
+
+    events = []
+    real_eval = E.BitmapMiner.evaluate_pairs
+    real_comp = E.BitmapMiner.maybe_compact
+
+    def eval_spy(self, cols):
+        r = real_eval(self, cols)
+        events.append(("eval", self._store.grows, int(cols["ua"].size)))
+        return r
+
+    def comp_spy(self, reserve):
+        m = real_comp(self, reserve)
+        events.append(("compact", self._store.grows, m is not None,
+                       int(reserve)))
+        return m
+
+    monkeypatch.setattr(E.BitmapMiner, "evaluate_pairs", eval_spy)
+    monkeypatch.setattr(E.BitmapMiner, "maybe_compact", comp_spy)
+
+    pair_chunk = 64
+    db = gen_powerlaw_baskets(n_trans=120, n_items=60, avg_trans_len=5,
+                              seed=0)
+    minsup = 3
+    out, stats = E.BitmapMiner(
+        scheme="eclat", early_stop=True, block_words=2,
+        pair_chunk=pair_chunk, compact_occupancy=1.0).mine(db, minsup)
+    assert out == mine_bruteforce(db, minsup)
+    assert stats.compactions > 0         # forcing actually fired
+
+    # split the event stream into drain groups (one compact each)
+    groups, cur = [], None
+    for ev in events:
+        if ev[0] == "compact":
+            if cur is not None:
+                groups.append(cur)
+            cur = {"grows": ev[1], "fired": ev[2], "reserve": ev[3],
+                   "pairs": 0, "grows_after": ev[1]}
+        else:
+            cur["pairs"] += ev[2]
+            cur["grows_after"] = ev[1]
+    groups.append(cur)
+    multi_chunk = 0
+    for g in groups:
+        # reserve == the whole group's evaluated pairs, never clamped
+        assert g["reserve"] == g["pairs"], g
+        if g["pairs"] > pair_chunk:
+            multi_chunk += 1
+        if g["fired"]:
+            assert g["grows_after"] == g["grows"], g
+    assert multi_chunk > 0               # the clamp would have bitten
+
+
+# ---------------------------------------------------------------------------
 # I6: allocator compaction invariants (ISSUE 4)
 # ---------------------------------------------------------------------------
 

@@ -71,12 +71,17 @@ def test_bitmap_kernel_es_aborts_and_freezes():
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("es", [False, True])
 @pytest.mark.parametrize("mode", ["and", "andnot"])
 @pytest.mark.parametrize("n_blocks,bw", [(1, 128), (3, 128), (5, 8)])
-def test_fused_screen_and_intersect_matches_ref(backend, mode, n_blocks, bw):
-    """ops.screen_and_intersect == gather + ES ref + scatter, bit-for-bit:
-    child rows and suffix tables land at `slots`, padding slots (>= cap)
-    are dropped, untouched store rows are untouched."""
+def test_fused_screen_and_intersect_matches_ref(backend, es, mode,
+                                                n_blocks, bw):
+    """ops.screen_and_intersect == screen_and_intersect_ref bit-for-bit
+    (the ref now pins the whole dispatch, survivor-gated scatter
+    included): child rows and suffix tables land at `slots` ONLY for
+    pairs whose support cleared minsup and that finished alive; dead
+    pairs' slots, padding slots (>= cap) and untouched store rows are
+    all left untouched (ISSUE 5)."""
     rng = np.random.default_rng(11)
     cap, n_pairs = 32, 9
     store0 = _random_bitmaps(rng, cap, n_blocks, bw)
@@ -88,22 +93,39 @@ def test_fused_screen_and_intersect_matches_ref(backend, mode, n_blocks, bw):
     rho = suffix0[ua, 0].astype(np.int32)
     n_trans = n_blocks * bw * 32
     for minsup in (0, 1, n_trans // 64, n_trans // 8):
-        Zr, cnt_r, blocks_r, alive_r = screen_and_intersect_ref(
-            store0, suffix0, ua, vb, rho, jnp.int32(minsup), mode=mode)
+        rows_r, suf_r, cnt_r, blocks_r, alive_r = screen_and_intersect_ref(
+            store0, suffix0, ua, vb, slots, rho, jnp.int32(minsup),
+            mode=mode, early_stop=es)
         rows, suffix, cnt, blocks, alive = ops.screen_and_intersect(
             jnp.asarray(store0), jnp.asarray(suffix0), ua, vb, slots, rho,
-            jnp.int32(minsup), mode=mode, backend=backend)
+            jnp.int32(minsup), mode=mode, early_stop=es, backend=backend)
         rows, suffix = np.asarray(rows), np.asarray(suffix)
-        key = (backend, mode, minsup)
+        key = (backend, es, mode, minsup)
         assert np.array_equal(np.asarray(cnt), np.asarray(cnt_r)), key
         assert np.array_equal(np.asarray(blocks), np.asarray(blocks_r)), key
         assert np.array_equal(np.asarray(alive), np.asarray(alive_r)), key
+        assert np.array_equal(rows, np.asarray(rows_r)), key
+        assert np.array_equal(suffix, np.asarray(suf_r)), key
+        # survivor-only scatter: recompute the expected Z and check each
+        # slot was written iff its pair survived the frequency gate
+        es_minsup = minsup if es else 0
+        Zr, _, _, _ = bitmap_intersect_es_ref(
+            store0[ua], store0[vb], suffix0[ua], suffix0[vb], rho,
+            jnp.int32(es_minsup), mode=mode)
         Zr = np.asarray(Zr)
+        support = (np.asarray(cnt) if mode == "and"
+                   else rho - np.asarray(cnt))
+        keep = np.logical_and(np.asarray(alive), support >= minsup)
         for i, s in enumerate(slots):
-            if s < cap:
+            if s >= cap:
+                continue
+            if keep[i]:
                 assert np.array_equal(rows[s], Zr[i]), key
-                assert np.array_equal(suffix[s],
-                                      suffix_popcounts_np(Zr[i:i+1])[0]), key
+                assert np.array_equal(
+                    suffix[s], suffix_popcounts_np(Zr[i:i+1])[0]), key
+            else:
+                assert np.array_equal(rows[s], store0[s]), (key, i)
+                assert np.array_equal(suffix[s], suffix0[s]), (key, i)
         untouched = [r for r in range(cap) if r not in set(slots.tolist())]
         assert np.array_equal(rows[untouched], store0[untouched]), key
         assert np.array_equal(suffix[untouched], suffix0[untouched]), key
@@ -228,15 +250,90 @@ def test_nlist_extend_matches_ref(backend, es, lu, lv):
                                "comparisons", "checks", "alive"), r, g):
             assert np.array_equal(np.asarray(a), np.asarray(b)), (
                 backend, es, minsup, name)
-        # untouched pool rows stay untouched; OOB extents are dropped
+        # survivor-only scatter (ISSUE 5): only extents of pairs whose
+        # support cleared minsup are written; dead pairs' extents, OOB
+        # extents and untouched pool rows all stay untouched
         new_codes = np.asarray(g[0])
         child_len = np.asarray(g[1])
+        support = np.asarray(g[2])
         written = set()
         for p in range(n_pairs - 1):
-            written.update(range(out_off[p], out_off[p] + child_len[p]))
+            if support[p] >= minsup:
+                written.update(range(out_off[p], out_off[p] + child_len[p]))
         untouched = [i for i in range(cap) if i not in written]
         assert np.array_equal(new_codes[untouched], codes[untouched]), (
             backend, es, minsup)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("es", [False, True])
+def test_nlist_presize_scatter_split_matches_ref_and_extend(backend, es):
+    """The two-dispatch split (ISSUE 5 tentpole) is pinned twice over:
+    ops.nlist_presize == ref.nlist_presize_ref bit-for-bit on both
+    backends, and presize + tight survivor-only nlist_scatter writes
+    exactly the children the one-dispatch nlist_extend would have
+    (same contents, read back from tight extents)."""
+    from repro.kernels.ref import (nlist_presize_ref, nlist_scatter_ref,
+                                   nlist_extend_ref)
+
+    rng = np.random.default_rng(17)
+    cap, n_pairs, lu, lv = 2048, 9, 8, 32
+    u_off = rng.integers(0, 256, n_pairs).astype(np.int32)
+    v_off = rng.integers(256, 512 - lv, n_pairs).astype(np.int32)
+    u_len = rng.integers(1, lu + 1, n_pairs).astype(np.int32)
+    v_len = rng.integers(1, lv + 1, n_pairs).astype(np.int32)
+    codes = _random_pool(rng, cap, list(zip(u_off, u_len))
+                         + list(zip(v_off, v_len)))
+    rho = rng.integers(0, 120, n_pairs).astype(np.int32)
+
+    for minsup in (0, 1, 10, 80):
+        r = nlist_presize_ref(jnp.asarray(codes), u_off, u_len, v_off,
+                              v_len, rho, jnp.int32(minsup),
+                              lu=lu, lv=lv, early_stop=es)
+        g = ops.nlist_presize(jnp.asarray(codes), u_off, u_len, v_off,
+                              v_len, rho, jnp.int32(minsup),
+                              lu=lu, lv=lv, early_stop=es, backend=backend)
+        for name, a, b in zip(("out_slot", "child_len", "support",
+                               "comparisons", "checks", "alive"), r, g):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                backend, es, minsup, name)
+        out_slot, child_len, support = (np.asarray(g[0]),
+                                        np.asarray(g[1]),
+                                        np.asarray(g[2]))
+        # host side of the split: tight extents for survivors only
+        keep = support >= minsup
+        out_off = np.full(n_pairs, cap, np.int32)       # dropped
+        bump = 512
+        for p in np.nonzero(keep)[0]:
+            out_off[p] = bump
+            bump += int(child_len[p])                   # TIGHT: exact len
+        sc_codes, sc_len = ops.nlist_scatter(
+            jnp.asarray(codes), g[0], u_off, u_len, v_off, v_len,
+            out_off, lu=lu, lv=lv, backend=backend)
+        rc_codes, rc_len = nlist_scatter_ref(
+            jnp.asarray(codes), r[0], u_off, u_len, v_off, v_len,
+            out_off, lu=lu, lv=lv)
+        assert np.array_equal(np.asarray(sc_codes), np.asarray(rc_codes))
+        assert np.array_equal(np.asarray(sc_len), np.asarray(rc_len))
+        # the one-dispatch composition scatters the same children
+        ex_off = (512 + lu * np.arange(n_pairs)).astype(np.int32)
+        ex = nlist_extend_ref(jnp.asarray(codes), u_off, u_len, v_off,
+                              v_len, ex_off, rho, jnp.int32(minsup),
+                              lu=lu, lv=lv, early_stop=es)
+        ex_codes = np.asarray(ex[0])
+        sc_codes = np.asarray(sc_codes)
+        assert np.array_equal(np.asarray(ex[1]), child_len)
+        for p in np.nonzero(keep)[0]:
+            ln = int(child_len[p])
+            assert np.array_equal(sc_codes[out_off[p]:out_off[p] + ln],
+                                  ex_codes[ex_off[p]:ex_off[p] + ln]), (
+                backend, es, minsup, p)
+        # non-survivors and the rest of the slab stay untouched
+        written = set()
+        for p in np.nonzero(keep)[0]:
+            written.update(range(out_off[p], out_off[p] + int(child_len[p])))
+        untouched = [i for i in range(cap) if i not in written]
+        assert np.array_equal(sc_codes[untouched], codes[untouched])
 
 
 @pytest.mark.parametrize("es", [False, True])

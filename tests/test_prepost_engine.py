@@ -1,11 +1,17 @@
 """Device-resident PrePost+ engine: dispatch-count and pool tests.
 
-The fused-path contract (ISSUE 3, mirroring test_fused_engine.py /
-test_distributed.py for the bitmap engines):
+The fused-path contract (ISSUE 3; ISSUE 5 split the dispatch in two,
+mirroring test_fused_engine.py / test_distributed.py for the bitmap
+engines):
 
-  * ``DevicePrePost.mine`` issues exactly ONE device dispatch per pair
-    chunk (``ops.nlist_extend``) — no host-padded ``nlist_intersect``
-    call, no per-level host N-list materialisation;
+  * ``DevicePrePost.mine`` issues exactly TWO device dispatches per
+    pair chunk — the merge pre-pass (``ops.nlist_presize``) and the
+    survivor-only scatter (``ops.nlist_scatter``), skipped when a chunk
+    has no survivors — and never the host-padded ``nlist_intersect``
+    or the legacy one-dispatch ``nlist_extend`` path, and never
+    materialises N-lists on host between levels;
+  * child extents are allocated tight (exact pre-pass lengths,
+    survivors only);
   * N-list pool growth preserves live rows bit-for-bit;
   * extent bucketing falls back to powers of two past the largest tuned
     bucket instead of raising.
@@ -34,28 +40,38 @@ def _random_db(seed, n_items=(3, 9), n_trans=(4, 30)):
     return db, minsup
 
 
-def test_one_nlist_dispatch_per_pair_chunk(monkeypatch):
-    """Every pair chunk is one fused ``nlist_extend``; the legacy
-    host-padded ``nlist_intersect`` path is never called by the miner."""
-    calls = {"fused": 0}
-    real = ops.nlist_extend
+def test_two_nlist_dispatches_per_pair_chunk(monkeypatch):
+    """Every pair chunk is one ``nlist_presize`` plus at most one
+    ``nlist_scatter`` (skipped when nothing survived); the host-padded
+    ``nlist_intersect`` and the legacy one-dispatch ``nlist_extend``
+    are never called by the miner."""
+    calls = {"presize": 0, "scatter": 0}
+    real_presize = ops.nlist_presize
+    real_scatter = ops.nlist_scatter
 
-    def counting_fused(*a, **k):
-        calls["fused"] += 1
-        return real(*a, **k)
+    def counting_presize(*a, **k):
+        calls["presize"] += 1
+        return real_presize(*a, **k)
+
+    def counting_scatter(*a, **k):
+        calls["scatter"] += 1
+        return real_scatter(*a, **k)
 
     def forbidden(*a, **k):
-        raise AssertionError("host-padded nlist_intersect path used")
+        raise AssertionError("legacy nlist dispatch path used")
 
-    monkeypatch.setattr(ops, "nlist_extend", counting_fused)
+    monkeypatch.setattr(ops, "nlist_presize", counting_presize)
+    monkeypatch.setattr(ops, "nlist_scatter", counting_scatter)
     monkeypatch.setattr(ops, "nlist_intersect", forbidden)
+    monkeypatch.setattr(ops, "nlist_extend", forbidden)
 
     db, minsup = _random_db(3, n_items=(8, 8), n_trans=(25, 30))
     miner = DevicePrePost(early_stop=True, pair_chunk=2)
     out, stats = miner.mine(db, minsup)
-    assert calls["fused"] == stats.device_calls
-    # small pair_chunk forces several chunks; each was one dispatch
-    assert stats.device_calls >= 2
+    assert calls["presize"] + calls["scatter"] == stats.device_calls
+    assert calls["scatter"] <= calls["presize"]   # no-survivor chunks skip
+    # small pair_chunk forces several chunks
+    assert calls["presize"] >= 2
     expected, _ = mine(db, minsup, "prepost", early_stop=True)
     assert out == expected
 
@@ -63,7 +79,11 @@ def test_one_nlist_dispatch_per_pair_chunk(monkeypatch):
 def test_pool_extents_recycled_end_to_end(monkeypatch):
     """Spent rows return their extents: when the DFS finishes every
     extent is back on the free list, and the peak live mass stays below
-    the cumulative allocation (recycling actually happened)."""
+    the cumulative allocation (recycling actually happened).  Since
+    ISSUE 5 only *surviving* children allocate at all (a dead candidate
+    never touches the pool), so the cumulative mass itself is tight —
+    the seed here is a deep DFS where classes are released and reused
+    across many drain groups."""
     import repro.core.prepost as PP
 
     created = []
@@ -75,7 +95,7 @@ def test_pool_extents_recycled_end_to_end(monkeypatch):
             created.append(self)
 
     monkeypatch.setattr(PP, "NListPool", CapturePool)
-    db, minsup = _random_db(5, n_items=(9, 9), n_trans=(28, 30))
+    db, minsup = _random_db(8, n_items=(9, 9), n_trans=(28, 30))
     out, stats = mine_prepost_device(db, minsup, pair_chunk=8)
     expected, _ = mine(db, minsup, "prepost", early_stop=True)
     assert out == expected
@@ -83,6 +103,35 @@ def test_pool_extents_recycled_end_to_end(monkeypatch):
     assert pool.live_codes == 0 and pool.n_live_rows == 0
     assert stats.peak_codes == pool.peak_codes
     assert pool.peak_codes < pool.total_alloc_codes
+
+
+def test_child_extents_allocated_tight_and_survivor_only(monkeypatch):
+    """ISSUE 5 allocation contract: after the level-1 upload, the pool
+    only ever receives allocation requests for FREQUENT children (one
+    per itemset of size >= 2 — dead candidates never touch the pool),
+    and each request carries the child's exact merge length, never a
+    pessimistic ``min(|U|, |V|)`` bound."""
+    import repro.core.prepost as PP
+
+    calls = []
+    real = PP.NListPool.alloc_rows
+
+    def spy(self, lengths):
+        calls.append([int(v) for v in lengths])
+        return real(self, lengths)
+
+    monkeypatch.setattr(PP.NListPool, "alloc_rows", spy)
+    db, minsup = _random_db(8, n_items=(9, 9), n_trans=(28, 30))
+    out, stats = mine_prepost_device(db, minsup, pair_chunk=8)
+    expected, _ = mine(db, minsup, "prepost", early_stop=True)
+    assert out == expected
+    n_children = sum(1 for s in out if len(s) >= 2)
+    child_calls = calls[1:]                  # calls[0] = level-1 upload
+    assert sum(len(c) for c in child_calls) == n_children
+    assert stats.child_scatters == n_children
+    assert stats.candidates > n_children     # some candidates died
+    # every allocated length is a real (positive) merge result
+    assert all(ln >= 1 for c in child_calls for ln in c)
 
 
 def test_pool_growth_preserves_live_rows_bit_for_bit():
