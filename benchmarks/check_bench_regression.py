@@ -17,7 +17,14 @@ build (ROADMAP "CI trajectory" item).  Per smoke dataset:
   written by child materialization — must not regress beyond
   ``--peak-tol`` for either engine; survivor-only scatter makes this a
   deterministic function of the frequent children, so an increase
-  means dead candidates started being materialised again.
+  means dead candidates started being materialised again;
+* density-adaptive engine (ISSUE 6): the ``adaptive`` runs' ``word_ops``
+  (small tolerance), ``device_calls``, ``peak_rows`` and
+  ``scatter_words`` (``--peak-tol``) must not regress either, and the
+  dense regime's adaptive ES ``word_ops`` must stay strictly below its
+  recorded same-granularity tidset reference (``tidset_es_word_ops``) —
+  losing that gap means the representation switch stopped paying for
+  itself.
 
 All metrics are deterministic functions of the engines (integer math
 over seeded synthetic datasets).  A legitimate engine change that
@@ -82,6 +89,38 @@ def compare_dataset(name: str, current: dict, baseline: dict,
                 f"{name}/{run}: prepost scatter_words regressed "
                 f"{pbase['scatter_words']} -> {pcur['scatter_words']} "
                 f"(limit {scatter_limit:.0f})")
+    for run in RUNS:
+        acur, abase = current["adaptive"][run], baseline["adaptive"][run]
+        if acur["device_calls"] > abase["device_calls"]:
+            failures.append(
+                f"{name}/adaptive/{run}: device_calls regressed "
+                f"{abase['device_calls']} -> {acur['device_calls']}")
+        limit = abase["word_ops"] * (1.0 + word_ops_tol)
+        if acur["word_ops"] > limit:
+            failures.append(
+                f"{name}/adaptive/{run}: word_ops regressed "
+                f"{abase['word_ops']} -> {acur['word_ops']} "
+                f"(limit {limit:.0f})")
+        peak_limit = abase["peak_rows"] * (1.0 + peak_tol)
+        if acur["peak_rows"] > peak_limit:
+            failures.append(
+                f"{name}/adaptive/{run}: peak_rows regressed "
+                f"{abase['peak_rows']} -> {acur['peak_rows']} "
+                f"(limit {peak_limit:.0f})")
+        scatter_limit = abase["scatter_words"] * (1.0 + peak_tol)
+        if acur["scatter_words"] > scatter_limit:
+            failures.append(
+                f"{name}/adaptive/{run}: scatter_words regressed "
+                f"{abase['scatter_words']} -> {acur['scatter_words']} "
+                f"(limit {scatter_limit:.0f})")
+    if name == "dense":
+        acur = current["adaptive"]
+        if acur["es"]["word_ops"] >= acur["tidset_es_word_ops"]:
+            failures.append(
+                f"{name}: adaptive ES word_ops "
+                f"{acur['es']['word_ops']} no longer below the "
+                f"same-granularity tidset reference "
+                f"{acur['tidset_es_word_ops']}")
     cur_saved = current["word_ops_saved_frac"]
     base_saved = baseline["word_ops_saved_frac"]
     if cur_saved < base_saved - word_ops_tol:
@@ -138,7 +177,10 @@ def main() -> None:
                   f"{cur_ds['prepost'][run]['peak_codes']}, "
                   f"prepost scatter_words "
                   f"{base_ds['prepost'][run]['scatter_words']} -> "
-                  f"{cur_ds['prepost'][run]['scatter_words']}",
+                  f"{cur_ds['prepost'][run]['scatter_words']}, "
+                  f"adaptive word_ops "
+                  f"{base_ds['adaptive'][run]['word_ops']} -> "
+                  f"{cur_ds['adaptive'][run]['word_ops']}",
                   file=sys.stderr)
     if failures:
         print("BENCH REGRESSION:\n  " + "\n  ".join(failures),

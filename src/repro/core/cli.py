@@ -33,8 +33,17 @@ def main() -> None:
     src.add_argument("--input", help="FIMI-format transaction file")
     ap.add_argument("--minsup", type=float, default=0.01,
                     help="<1: relative; >=1: absolute count")
-    ap.add_argument("--scheme", choices=("eclat", "declat", "prepost"),
+    ap.add_argument("--scheme",
+                    choices=("eclat", "declat", "adaptive", "prepost"),
                     default="eclat")
+    ap.add_argument("--diff-density", type=float, default=None,
+                    help="adaptive scheme: density threshold for the "
+                         "tidset->diffset flip (default 0.5)")
+    ap.add_argument("--diff-hysteresis", type=float, default=None,
+                    help="adaptive scheme: band above the threshold "
+                         "the flip must clear (default 0.05)")
+    ap.add_argument("--block-words", type=int, default=8,
+                    help="bitmap engine: words per ES block")
     ap.add_argument("--engine", choices=("oracle", "bitmap"),
                     default="bitmap")
     ap.add_argument("--es", action="store_true", default=True,
@@ -65,11 +74,20 @@ def main() -> None:
                                              early_stop=args.es)
         else:
             from repro.core.eclat import mine_bitmap
+            kw = {}
+            if args.diff_density is not None:
+                kw["diff_density"] = args.diff_density
+            if args.diff_hysteresis is not None:
+                kw["diff_hysteresis"] = args.diff_hysteresis
             out, stats = mine_bitmap(db, minsup, scheme=args.scheme,
-                                     early_stop=args.es, block_words=8)
+                                     early_stop=args.es,
+                                     block_words=args.block_words, **kw)
     else:
         from repro.core.oracle import mine
-        out, stats = mine(db, minsup, args.scheme, early_stop=args.es)
+        # The oracle has no adaptive mode; the result set is
+        # scheme-invariant, so eclat is the reference for it.
+        scheme = "eclat" if args.scheme == "adaptive" else args.scheme
+        out, stats = mine(db, minsup, scheme, early_stop=args.es)
 
     print(f"frequent itemsets: {len(out)}", file=sys.stderr)
     print(json.dumps(stats.as_dict(), indent=1), file=sys.stderr)

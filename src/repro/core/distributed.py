@@ -181,17 +181,22 @@ def make_mining_round_v2(mesh: Mesh, *, pair_chunk: int = 2048):
 # ---------------------------------------------------------------------------
 
 class DistributedMiner(BitmapMiner):
-    """Count-distribution Eclat over a device mesh.
+    """Count-distribution Eclat / dEclat / adaptive over a device mesh.
 
     The host/DFS split, drain-group batching, free-list bookkeeping,
-    allocator compaction scheduling and stats all come from
-    ``BitmapMiner`` driving ``core.frontier.FrontierScheduler``; this
-    class only swaps in
+    allocator compaction scheduling, representation policy
+    (``scheme``/``diff_density``/``diff_hysteresis`` — ISSUE 6) and
+    stats all come from ``BitmapMiner`` driving
+    ``core.frontier.FrontierScheduler``; this class only swaps in
 
       * a block-sharded ``DeviceRowStore`` (slab + per-shard suffix
         tables under ``NamedSharding``s, growing on demand), and
-      * the fused shard_map dispatch — one device call and one psum per
-        pair chunk, no separate screen/count/materialize programs.
+      * the fused shard_map dispatches — one device call and one psum
+        per pair chunk (per representation present in the chunk), no
+        separate screen/count/materialize programs.  Tidset chunks run
+        the ``mode="and"`` program; diffset chunks the ``mode="andnot"``
+        program, whose shard-local scan walks the difference bound
+        ``rho - count`` and charges only nonzero-mass U blocks.
 
     ``tid_axes`` defaults to every mesh axis (maximum block
     parallelism).  ``capacity`` is an initial-size hint only: the slab
@@ -203,20 +208,34 @@ class DistributedMiner(BitmapMiner):
     def __init__(self, mesh: Mesh, *,
                  tid_axes: Tuple[str, ...] = None,
                  pair_axis: str = None,
+                 scheme: str = "eclat",
                  early_stop: bool = True,
                  capacity: int = 4096, pair_chunk: int = 4096,
                  block_words: int = DEFAULT_BLOCK_WORDS,
-                 compact_occupancy: float = 0.25):
-        super().__init__(scheme="eclat", early_stop=early_stop,
+                 compact_occupancy: float = 0.25,
+                 diff_density: "float | None" = None,
+                 diff_hysteresis: float = 0.05):
+        super().__init__(scheme=scheme, early_stop=early_stop,
                          block_words=block_words, pair_chunk=pair_chunk,
                          backend="jnp",
-                         compact_occupancy=compact_occupancy)
+                         compact_occupancy=compact_occupancy,
+                         diff_density=diff_density,
+                         diff_hysteresis=diff_hysteresis)
         del pair_axis
         self.mesh = mesh
         self.tid_axes = tuple(tid_axes) if tid_axes else tuple(mesh.axis_names)
         self.capacity = capacity
+        # Two fused shard_map programs share the factory's lru_cache:
+        # ``_fused`` ("and") extends tidset classes — it keeps its
+        # pre-ISSUE-6 name so call-counting harnesses that wrap the
+        # attribute still see every tidset dispatch — and
+        # ``_fused_diff`` ("andnot") is the diffset difference with the
+        # skip-aware work counter.
         self._fused = ops.make_screen_and_intersect_sharded(
             mesh, tid_axes=self.tid_axes, mode="and",
+            early_stop=early_stop)
+        self._fused_diff = ops.make_screen_and_intersect_sharded(
+            mesh, tid_axes=self.tid_axes, mode="andnot",
             early_stop=early_stop)
 
     def _make_store(self, bdb: BitmapDB) -> DeviceRowStore:
@@ -230,16 +249,14 @@ class DistributedMiner(BitmapMiner):
                   vb: np.ndarray, slots: np.ndarray, rho: np.ndarray,
                   mode: str, stats: DeviceMiningStats,
                   ) -> Tuple[np.ndarray, np.ndarray]:
-        if mode != "and":
-            # The fused program was compiled with mode="and" in __init__;
-            # silently intersecting instead of differencing would corrupt
-            # supports, so fail loudly if a dEclat path ever lands here.
-            raise NotImplementedError(
-                "DistributedMiner is eclat-only (mode='and')")
+        # "and" -> tidset intersect program, "diff" -> diffset
+        # difference program (ISSUE 6: declat/adaptive schemes route
+        # their diff chunks here; both programs were built in __init__).
+        fused = self._fused if mode == "and" else self._fused_diff
         n = int(ua.size)
         cap = store.capacity
         (store.rows, store.suffix, bound, count, blocks,
-         scan_alive) = self._fused(
+         scan_alive) = fused(
             store.rows, store.suffix,
             _bucket_pad(ua, n), _bucket_pad(vb, n),
             _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped

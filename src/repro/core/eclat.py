@@ -33,16 +33,39 @@ drops far enough the scheduler compacts the slab at a drain-group
 boundary (``DeviceRowStore.compact_if_sparse``) and remaps the
 frontier's slot handles through the returned mapping.
 
+Representations (ISSUE 6): the same slab holds BOTH bitmap
+representations.  A class is tagged ``tidset`` (rows are TID bitmaps,
+pairs dispatch through ``ops.screen_and_intersect``) or ``diffset``
+(rows are dEclat difference bitmaps ``d(Pxy)``, pairs dispatch through
+``ops.screen_and_diff`` on the difference bound ``sup(parent) -
+|diff|``).  ``scheme="eclat"`` stays tidset everywhere,
+``scheme="declat"`` flips at level 2, and ``scheme="adaptive"`` flips a
+subtree tidset→diffset when its density (mean member support /
+n_trans) clears ``diff_density + diff_hysteresis`` at ``make_class``
+time — dense classes are where diffsets shrink operands the most
+(|d| = sup(parent) - sup(child)).  The flip is one-way (the parent
+tidset rows are freed when the class drains) and costs no extra round
+trip: the very same diff dispatch that extends diffset classes converts
+a tidset pair ``T(a), T(b)`` into the level-2 diffset ``d(ab) = T(a) &
+~T(b)`` inside its child scatter.  Mixed drain groups carry a per-pair
+``op`` column; ``chunk_sort_key`` orders pairs by it so chunks stay
+mode-homogeneous and pure schemes keep exactly one dispatch per chunk.
+
 Work metric: ``word_ops`` — uint32 word operations actually performed
 (blocks_done x block_words per pair; the fused screen is block 0 of the
 same scan).  This is the device analogue of the paper's #comparisons and
 is what benchmarks/bench_paper.py reports next to the oracle's exact
-counter.
+counter.  Diff dispatches charge only nonzero-mass U blocks (a zero
+block of a sparse diffset operand cannot contribute to ``U & ~V`` and
+is skipped), while ``word_ops_full`` stays the dense tidset full-scan
+cost ``n_pairs * n_blocks * block_words`` — the paper's non-ES
+baseline — so ``word_ops_saved_frac`` folds in both the ES savings and
+the representation savings.
 
 The traversal policy (work stack, cross-class drain-group batching,
 chunk slicing, operand free-listing, compaction scheduling) lives in
 ``core.frontier.FrontierScheduler`` — this module only implements the
-scheduler's client protocol on top of the fused bitmap dispatch.
+scheduler's client protocol on top of the fused bitmap dispatches.
 """
 
 from __future__ import annotations
@@ -67,6 +90,17 @@ ItemsetSupports = Dict[FrozenSet[Hashable], int]
 # Canonical table lives in core.bitmap next to bucket_pad (ISSUE 5
 # consolidation) so the pair-chunk clamp and the pad logic cannot drift.
 _PAIR_BUCKETS = PAIR_CHUNK_BUCKETS
+
+# Per-pair dispatch-mode codes carried in the ``op`` column (int8):
+# chunk_sort_key orders mixed drain groups by this so chunks stay
+# mode-homogeneous.
+_OP_AND = 0                    # tidset intersect (ops.screen_and_intersect)
+_OP_DIFF = 1                   # diffset difference (ops.screen_and_diff)
+
+# Default density threshold for scheme="adaptive": a class whose mean
+# member support exceeds this fraction of n_trans (plus the hysteresis
+# band) materialises its children as diffsets.
+DEFAULT_DIFF_DENSITY = 0.5
 
 
 @dataclass
@@ -125,8 +159,8 @@ def _bucket_pad(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
 
 
 class BitmapMiner:
-    """Eclat / dEclat over a device-resident row store with fused
-    screen+intersect early stopping.
+    """Eclat / dEclat / density-adaptive mining over a device-resident
+    row store with fused screen+intersect(+difference) early stopping.
 
     The DFS itself is ``core.frontier.FrontierScheduler`` — this class is
     its client: it turns one class's sibling-pair triangle into store
@@ -135,20 +169,42 @@ class BitmapMiner:
     allocator memory-tuning knob: when live rows fall below that
     fraction of the slab (and the slab would at least halve), the
     scheduler compacts it between drain groups; 0 disables compaction.
+
+    ``scheme="adaptive"`` (ISSUE 6) mines tidsets but flips a subtree
+    to diffsets when its class density (mean member support / n_trans)
+    clears ``diff_density + diff_hysteresis`` — the flip is one-way and
+    rides the normal child scatter (see the module docstring), so it
+    costs no extra device round trip.
     """
 
     def __init__(self, scheme: str = "eclat", early_stop: bool = True,
                  block_words: int = DEFAULT_BLOCK_WORDS,
                  pair_chunk: int = 65536, backend: str = "auto",
-                 metrics: bool = True, compact_occupancy: float = 0.25):
-        if scheme not in ("eclat", "declat"):
+                 metrics: bool = True, compact_occupancy: float = 0.25,
+                 diff_density: "float | None" = None,
+                 diff_hysteresis: float = 0.05):
+        if scheme not in ("eclat", "declat", "adaptive"):
             raise ValueError(f"bad scheme {scheme!r}")
+        if scheme == "adaptive":
+            if diff_density is None:
+                diff_density = DEFAULT_DIFF_DENSITY
+        elif diff_density is not None:
+            raise ValueError(
+                "diff_density only applies to scheme='adaptive' "
+                "(eclat is tidset-only, declat flips unconditionally)")
         self.scheme = scheme
         self.early_stop = early_stop
         self.block_words = block_words
         self.pair_chunk = min(pair_chunk, _PAIR_BUCKETS[-1])
         self.backend = backend
         self.compact_occupancy = compact_occupancy
+        # Density-adaptive representation knobs (ISSUE 6): a class flips
+        # its children tidset->diffset when density clears
+        # ``diff_density + diff_hysteresis``; classes straddling the bare
+        # threshold stay tidset (the band plus the one-way flip rule is
+        # what makes the choice stable across consecutive drain groups).
+        self.diff_density = diff_density
+        self.diff_hysteresis = diff_hysteresis
         # The fused dispatch returns exact blocks_done/word_ops for free;
         # ``metrics`` is kept for API compatibility and no longer selects
         # a separate (two-dispatch) fast path.
@@ -168,12 +224,18 @@ class BitmapMiner:
             stats.nodes += 1
 
         store = self._make_store(bdb)
+        self._minsup = minsup
+        self._n_trans = bdb.n_trans
+        supports = bdb.supports.astype(np.int32)
         root = ClassNode(
             itemsets=[(it,) for it in bdb.items],
             rows=np.arange(bdb.n_items, dtype=np.int32),
-            supports=bdb.supports.astype(np.int32),
-            payload=True)                  # payload: is_tidlist
-        self._minsup = minsup
+            supports=supports,
+            representation="tidset",       # level-1 rows are TID bitmaps
+            # payload: the representation this class's CHILDREN will be
+            # materialised in (declat flips at level 2; adaptive flips
+            # when the density threshold clears).
+            payload=self._child_representation("tidset", supports))
         # Work metrics use the REAL block count: a sharded store pads
         # its block axis up to the shard count, and charging those
         # all-zero pad blocks to ``word_ops_full`` inflated every
@@ -194,44 +256,99 @@ class BitmapMiner:
             bdb.bitmaps,
             capacity=bdb.n_items + min(self.pair_chunk, 4096))
 
+    # -- representation policy (ISSUE 6) ------------------------------------
+
+    def _child_representation(self, member_rep: str,
+                              supports: np.ndarray) -> str:
+        """Decide, once per class, the representation its children are
+        materialised in.  Flips are ONE-WAY (a diffset subtree never
+        reverts — its parent tidset rows are freed when the class
+        drains), and the adaptive rule only fires when the class
+        density clears ``diff_density + diff_hysteresis``: a class
+        straddling the bare threshold keeps its tidsets, so the choice
+        cannot oscillate across consecutive drain groups."""
+        if member_rep == "diffset":
+            return "diffset"               # one-way: stay diffset
+        if self.scheme == "declat":
+            return "diffset"               # unconditional level-2 flip
+        if self.diff_density is None:
+            return "tidset"                # eclat: tidset everywhere
+        if supports.size == 0:
+            return "tidset"
+        density = float(np.mean(supports)) / max(self._n_trans, 1)
+        if density >= self.diff_density + self.diff_hysteresis:
+            return "diffset"
+        return "tidset"
+
     # -- FrontierScheduler client protocol ----------------------------------
 
     def pair_columns(self, klass: ClassNode, ia: np.ndarray,
                      ib: np.ndarray) -> Dict[str, np.ndarray]:
-        # Operand orientation (paper Alg. 1/2):
-        #   eclat:             Z = T(Px) & T(Py)
-        #   declat level 2:    D(xy)  = T(x)  & ~T(y)  (U=x,  V=y)
-        #   declat level >=3:  D(Pxy) = D(Py) & ~D(Px) (U=Py, V=Px)
-        if self.scheme == "eclat" or klass.payload:
-            ua, vb = ia, ib
+        # Operand orientation (paper Alg. 1/2), keyed off what the
+        # member rows HOLD (klass.representation) and what the children
+        # should BECOME (klass.payload — fixed at make_class time):
+        #   tidset -> tidset:   Z = T(Px) & T(Py)          (op AND)
+        #   tidset -> diffset:  D(xy)  = T(x)  & ~T(y)     (op DIFF,
+        #       the in-scatter representation conversion: U=x, V=y)
+        #   diffset members:    D(Pxy) = D(Py) & ~D(Px)    (op DIFF,
+        #       U=Py, V=Px)
+        if klass.representation == "diffset":
+            ua, vb, op = ib, ia, _OP_DIFF
+        elif klass.payload == "diffset":
+            ua, vb, op = ia, ib, _OP_DIFF
         else:
-            ua, vb = ib, ia
+            ua, vb, op = ia, ib, _OP_AND
         return {"ua": klass.rows[ua].astype(np.int32),
                 "vb": klass.rows[vb].astype(np.int32),
-                "rho": klass.supports[ia].astype(np.int32)}
+                "rho": klass.supports[ia].astype(np.int32),
+                "op": np.full(ia.size, op, np.int8)}
+
+    def chunk_sort_key(self, cols: Dict[str, np.ndarray],
+                       ) -> "np.ndarray | None":
+        """Stable-sort mixed drain groups by dispatch mode so chunk
+        slices stay mode-homogeneous: pure schemes (and most adaptive
+        groups) keep exactly ONE fused dispatch per chunk; only a chunk
+        that genuinely straddles the AND/DIFF boundary splits in two."""
+        op = cols["op"]
+        if op.size and int(op.min()) != int(op.max()):
+            return op
+        return None                        # homogeneous: keep order
 
     def evaluate_pairs(self, cols: Dict[str, np.ndarray],
                        ) -> List[Tuple[int, int, int, Any]]:
-        """One pair-chunk slice -> ONE fused device dispatch.
+        """One pair-chunk slice -> ONE fused device dispatch per
+        representation present (exactly one for mode-homogeneous
+        chunks — the common case, see ``chunk_sort_key``).
 
         Returns the frequent children as ``(ki, slot, support, None)``
         tuples (``ki`` = chunk-local pair index)."""
         store, stats = self._store, self._stats
-        ua, vb, rho = cols["ua"], cols["vb"], cols["rho"]
+        ua, vb, rho, op = cols["ua"], cols["vb"], cols["rho"], cols["op"]
         n = int(ua.size)
         stats.candidates += n
+        # word_ops_full is the dense tidset full-scan cost for EVERY
+        # pair (the paper's non-ES baseline): diff dispatches that skip
+        # zero-mass blocks show up as saved fraction, not a moving
+        # baseline.
         stats.word_ops_full += n * self._n_blocks * self.block_words
-        mode = "and" if self.scheme == "eclat" else "andnot"
 
         slots = store.alloc(n)
-        cnt, alive = self._dispatch(store, ua, vb, slots, rho, mode, stats)
-
-        support = cnt if self.scheme == "eclat" else rho - cnt
-        # Dead pairs carry frozen (partial) counts; in "andnot" mode a frozen
-        # count *overestimates* the support, so aliveness is load-bearing.
-        # This mask is exactly the dispatch's in-kernel scatter gate
-        # (ref._survivor_mask): only these children were materialised.
-        freq = np.logical_and(support >= self._minsup, alive)
+        support = np.zeros(n, np.int64)
+        freq = np.zeros(n, bool)
+        for op_code, mode in ((_OP_AND, "and"), (_OP_DIFF, "diff")):
+            sel = np.nonzero(op == op_code)[0]
+            if sel.size == 0:
+                continue
+            cnt, alive = self._dispatch(store, ua[sel], vb[sel],
+                                        slots[sel], rho[sel], mode, stats)
+            sup = cnt if mode == "and" else rho[sel] - cnt
+            support[sel] = sup
+            # Dead pairs carry frozen (partial) counts; in diff mode a
+            # frozen count *overestimates* the support (rho - cnt), so
+            # aliveness is load-bearing.  This mask is exactly the
+            # dispatch's in-kernel scatter gate (ref._survivor_mask):
+            # only these children were materialised.
+            freq[sel] = np.logical_and(sup >= self._minsup, alive)
 
         kept_idx = np.nonzero(freq)[0]
         stats.child_scatters += int(kept_idx.size)
@@ -246,12 +363,18 @@ class BitmapMiner:
 
     def make_class(self, parent: ClassNode,
                    children: List[Child]) -> ClassNode:
-        del parent
+        supports = np.asarray([c.support for c in children], np.int32)
+        # The children were materialised in the representation the
+        # parent committed to at ITS make_class time; decide the
+        # grandchildren's representation here, once, so every sibling
+        # pair of the new class agrees on a dispatch mode.
+        rep = parent.payload
         return ClassNode(
             itemsets=[c.itemset for c in children],
             rows=np.asarray([c.row for c in children], np.int32),
-            supports=np.asarray([c.support for c in children], np.int32),
-            payload=False)                 # children are never tidlists
+            supports=supports,
+            representation=rep,
+            payload=self._child_representation(rep, supports))
 
     def emit(self, itemset: Tuple[Hashable, ...], support: int) -> None:
         self._out[frozenset(itemset)] = support
@@ -273,36 +396,49 @@ class BitmapMiner:
                   ) -> Tuple[np.ndarray, np.ndarray]:
         """One fused device dispatch; updates work/attribution stats.
 
-        Returns ``(cnt, alive)`` trimmed to the chunk length, where
-        ``cnt`` is the raw kernel count (support for "and", diffset size
-        for "andnot") and ``alive`` marks pairs that survived ES.  The
-        distributed miner overrides this with the shard_map dispatch."""
+        ``mode`` is "and" (tidset intersect) or "diff" (dEclat
+        difference — ``ops.screen_and_diff``).  Returns ``(cnt, alive)``
+        trimmed to the chunk length, where ``cnt`` is the raw kernel
+        count (support for "and", diffset size for "diff") and
+        ``alive`` marks pairs that survived ES.  The distributed miner
+        overrides this with the shard_map dispatches."""
         n = int(ua.size)
         cap = store.capacity
         # minsup is always the real threshold: the dispatch's
         # survivor-only scatter gate needs it even with ES disabled
         # (the ``early_stop`` flag alone controls the in-scan abort).
-        store.rows, store.suffix, cnt, blocks, alive = \
-            ops.screen_and_intersect(
-                store.rows, store.suffix,
-                _bucket_pad(ua, n), _bucket_pad(vb, n),
-                _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped
-                _bucket_pad(rho, n), jnp.int32(self._minsup),
-                mode=mode, early_stop=self.early_stop,
-                backend=self.backend)
+        if mode == "diff":
+            store.rows, store.suffix, cnt, blocks, alive = \
+                ops.screen_and_diff(
+                    store.rows, store.suffix,
+                    _bucket_pad(ua, n), _bucket_pad(vb, n),
+                    _bucket_pad(slots, n, fill=cap),  # OOB pad -> dropped
+                    _bucket_pad(rho, n), jnp.int32(self._minsup),
+                    early_stop=self.early_stop, backend=self.backend)
+        else:
+            store.rows, store.suffix, cnt, blocks, alive = \
+                ops.screen_and_intersect(
+                    store.rows, store.suffix,
+                    _bucket_pad(ua, n), _bucket_pad(vb, n),
+                    _bucket_pad(slots, n, fill=cap),  # OOB pad -> dropped
+                    _bucket_pad(rho, n), jnp.int32(self._minsup),
+                    mode=mode, early_stop=self.early_stop,
+                    backend=self.backend)
         stats.device_calls += 1
         cnt = np.asarray(cnt[:n])
         blocks = np.asarray(blocks[:n])
         alive = np.asarray(alive[:n])
         stats.word_ops += int(blocks.sum()) * self.block_words
         if self.early_stop:
-            # Attribution: a dead pair that did exactly one block was
-            # killed by the fused one-block screen — including on
-            # single-block datasets (nb == 1) and pairs that died on the
-            # final block (blocks == nb), which the pre-ISSUE-2 code
-            # dropped from both buckets.
+            # Attribution: a dead pair that did at most one (charged)
+            # block was killed by the fused one-block screen — including
+            # on single-block datasets (nb == 1) and pairs that died on
+            # the final block (blocks == nb), which the pre-ISSUE-2 code
+            # dropped from both buckets.  The ``<= 1`` covers diff
+            # dispatches, whose skip-aware counter may not charge the
+            # screen block itself (zero-mass prefix).
             dead = ~alive
-            stats.screened_out += int((dead & (blocks == 1)).sum())
+            stats.screened_out += int((dead & (blocks <= 1)).sum())
             stats.kernel_aborts += int((dead & (blocks > 1)).sum())
         return cnt, alive
 

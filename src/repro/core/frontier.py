@@ -26,11 +26,18 @@ Client protocol (duck-typed; the miners implement it directly):
 
 ``pair_columns(klass, ia, ib) -> Dict[str, np.ndarray]``
     Per-pair operand columns for one class's sibling-pair triangle.
+    Clients that mix *representations* (tidset vs diffset classes,
+    ISSUE 6) read ``klass.representation`` here to orient operands and
+    emit a per-pair op column so mixed drain groups stay dispatchable.
 ``evaluate_pairs(cols) -> Iterable[(ki, row, support, extra)]``
-    ONE fused device dispatch for a <= pair_chunk column slice; yields
-    the surviving children by chunk-local pair index.
+    ONE fused device dispatch for a <= pair_chunk column slice (one per
+    representation present in the slice, when a group mixes them);
+    yields the surviving children by chunk-local pair index.
 ``make_class(parent, children) -> ClassNode``
     Wrap surviving children of one (class, member) group as a new class.
+    This is also where a representation flip is decided: the returned
+    node's ``representation``/``payload`` tags are the only state the
+    adaptive tidset→diffset switch needs (see ``core.eclat``).
 ``emit(itemset, support)``          record one frequent itemset.
 ``release(klass)``                  free a class's operand rows.
 ``maybe_compact(reserve) -> Optional[np.ndarray]``
@@ -112,14 +119,22 @@ class ClassNode:
     """One equivalence class on the frontier.
 
     ``rows`` are allocator handles (row-store slots or N-list pool row
-    ids) — contents never leave the device.  ``payload`` carries the
-    engine-specific extras (bitmap: the is-tidlist flag; N-list: the
+    ids) — contents never leave the device.  ``representation`` tags
+    what those handles *hold* (ISSUE 6): ``"tidset"`` (TID bitmap
+    rows), ``"diffset"`` (dEclat difference rows) or ``"nlist"``
+    (PPC-code extents).  The tag rides the class, not the allocator —
+    both bitmap representations share one ``DeviceRowStore`` slab, and
+    compaction remaps ``rows`` only, so the tag survives remapping by
+    construction.  ``payload`` carries the engine-specific extras
+    (bitmap miners: the representation the class's *children* will be
+    materialised in, decided once at ``make_class`` time; N-list: the
     per-member exact lengths)."""
 
     itemsets: List[Tuple[Hashable, ...]]
     rows: np.ndarray          # int32 (m,)
     supports: np.ndarray      # int32 (m,)
     payload: Any = None
+    representation: str = "tidset"
 
 
 class Child(NamedTuple):
@@ -246,7 +261,7 @@ class FrontierScheduler:
             ia, ib = np.triu_indices(m, 1)
             for key, col in self.client.pair_columns(klass, ia, ib).items():
                 cols_l.setdefault(key, []).append(np.asarray(col))
-            meta.extend((ci, int(a), int(b)) for a, b in zip(ia, ib))
+            meta.extend((ci, int(a), int(b)) for a, b in zip(ia, ib, strict=True))
         cols = {k: np.concatenate(v) for k, v in cols_l.items()}
         key_fn = getattr(self.client, "chunk_sort_key", None)
         if key_fn is not None and len(meta) > 1:

@@ -241,7 +241,7 @@ class DevicePrePost:
         stats.child_scatters += int(kept.size)
         stats.scatter_words += 3 * int(child_len[kept].sum())
         return [(int(b), int(row), int(support[b]), int(child_len[b]))
-                for b, row in zip(kept, child_rows)]
+                for b, row in zip(kept, child_rows, strict=True)]
 
     def make_class(self, parent: ClassNode,
                    children: List[Child]) -> ClassNode:

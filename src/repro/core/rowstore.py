@@ -7,10 +7,17 @@ a parallel suffix-popcount slab.  The host never sees row *contents* — it
 only moves row *indices* around:
 
   * ``alloc(k)`` hands out ``k`` free slots (growing the slab on demand);
-  * the fused kernel (``kernels.ops.screen_and_intersect`` or its
-    shard_map variant) gathers operands by index and scatters children
-    back by slot index;
+  * the fused kernels (``kernels.ops.screen_and_intersect``,
+    ``kernels.ops.screen_and_diff`` or the shard_map variants) gather
+    operands by index and scatter children back by slot index;
   * ``free(ids)`` returns slots of dead candidates / expanded classes.
+
+The allocator is representation-agnostic (ISSUE 6): tidset and diffset
+rows are both ``uint32`` bitmap rows with suffix tables, so one slab,
+one free list and one compaction path serve both — what a row *means*
+is tracked per class by the frontier's ``ClassNode.representation``
+tag, never here.  Compaction's old->new mapping renumbers ``rows``
+handles only, so representation tags survive compaction untouched.
 
 Both mining engines allocate from this class (ISSUE 2 unification):
 
@@ -381,7 +388,7 @@ class NListPool:
         idx = np.concatenate([
             np.arange(self._row_off[int(r)],
                       self._row_off[int(r)] + len(a), dtype=np.int64)
-            for r, a in zip(rows, code_arrays)])
+            for r, a in zip(rows, code_arrays, strict=True)])
         vals = np.concatenate([np.asarray(a, np.int32).reshape(-1, 3)
                                for a in code_arrays])
         self.codes = self.codes.at[jnp.asarray(idx)].set(jnp.asarray(vals))

@@ -177,7 +177,9 @@ def shard_like(tree, shardings):
 def divisibility_report(shape: Tuple[int, ...], spec: P, mesh: Mesh):
     """Human-readable check that a shape divides its spec on the mesh."""
     problems = []
-    for dim, axis in zip(shape, spec):
+    # A PartitionSpec may omit trailing (unsharded) dims, so the spec is
+    # allowed to be shorter than the shape.
+    for dim, axis in zip(shape, spec, strict=False):
         if axis is None:
             continue
         axes = (axis,) if isinstance(axis, str) else axis

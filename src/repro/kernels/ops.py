@@ -29,6 +29,7 @@ from repro.core.bitmap import popcount32 as _popcount32
 from repro.core.bitmap import suffix_popcounts as _suffix_popcounts
 
 from . import ref as _ref
+from .bitmap_diff import bitmap_diff_es as _pallas_diff
 from .bitmap_intersect import bitmap_intersect_es as _pallas_bitmap
 
 
@@ -123,6 +124,63 @@ def screen_and_intersect(rows, suffix, ua, vb, slots, rho_parent, minsup,
         minsup, es_minsup, mode=mode, backend=b)
 
 
+@functools.partial(jax.jit, static_argnames=("backend",),
+                   donate_argnums=(0, 1))
+def _screen_and_diff_impl(rows, suffix, ua, vb, slots, rho_parent,
+                          minsup, es_minsup, *, backend: str):
+    U = jnp.take(rows, ua, axis=0)
+    V = jnp.take(rows, vb, axis=0)
+    su = jnp.take(suffix, ua, axis=0)
+    if backend == "pallas":
+        Z, cnt, blocks, alive = _pallas_diff(
+            U, V, su, rho_parent, es_minsup, interpret=not _on_tpu())
+    else:
+        Z, cnt, blocks, alive = _ref.bitmap_diff_es_ref(
+            U, V, su, rho_parent, es_minsup)
+    keep = _ref._survivor_mask(cnt, alive, rho_parent, minsup,
+                               mode="andnot")
+    slots_eff = jnp.where(keep, slots, jnp.int32(rows.shape[0]))
+    child_suffix = _suffix_popcounts(Z)
+    rows = rows.at[slots_eff].set(Z, mode="drop")
+    suffix = suffix.at[slots_eff].set(child_suffix, mode="drop")
+    return rows, suffix, cnt, blocks, alive
+
+
+def screen_and_diff(rows, suffix, ua, vb, slots, rho_parent, minsup,
+                    *, early_stop: bool = True, backend: str = "auto",
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                               jnp.ndarray, jnp.ndarray]:
+    """Fused screen + blocked dEclat difference over a device row store
+    (ISSUE 6) — the diffset sibling of :func:`screen_and_intersect` and
+    the fourth ``evaluate_pairs`` dispatch behind the shared client
+    protocol.
+
+    One device dispatch per pair chunk: gathers the operand rows (and
+    the U suffix table — the zero-block-skip mass source) by index,
+    runs the blocked scan on the difference bound ``rho_parent - count``
+    (block-0 screen included — see ``ref.screen_and_diff_ref``) and
+    scatters surviving children ``Z = U & ~V`` plus their suffix tables
+    into the store, survivor-only.  Feed it tidset operands and the
+    scattered child is the level-2 diffset ``d(ab) = T(a) & ~T(b)``:
+    the adaptive tidset→diffset flip rides the same dispatch.
+
+    ``blocks_done`` charges only nonzero-mass U blocks (diffset sparsity
+    is the win on dense data); counts/aliveness/results are bit-exact
+    vs ``screen_and_intersect(mode="andnot")``.  Pinned by
+    ``ref.screen_and_diff_ref`` on both backends.
+
+    ``rows``/``suffix`` are DONATED: callers must replace their handles.
+    Returns ``(rows, suffix, counts, blocks_done, alive)``.
+    """
+    b = _resolve(backend)
+    minsup = jnp.asarray(minsup, jnp.int32)
+    es_minsup = minsup if early_stop else jnp.int32(0)
+    return _screen_and_diff_impl(
+        rows, suffix, jnp.asarray(ua, jnp.int32), jnp.asarray(vb, jnp.int32),
+        jnp.asarray(slots, jnp.int32), jnp.asarray(rho_parent, jnp.int32),
+        minsup, es_minsup, backend=b)
+
+
 @functools.lru_cache(maxsize=None)
 def make_screen_and_intersect_sharded(mesh: Mesh,
                                       tid_axes: Tuple[str, ...] = (),
@@ -188,17 +246,32 @@ def make_screen_and_intersect_sharded(mesh: Mesh,
 
         Z, cnt, blocks, alive = _ref._blocked_es_scan(
             U, V, su, sv, rho, thr, mode=mode)
-        # Discount this shard's all-zero pad tail from the scan count
-        # (the store pads the block axis to the shard count; pads never
-        # change counts or aliveness) so the psum'd ``blocks`` — the
-        # word_ops numerator — is consistently unpadded.
         nbl = rows.shape[1]
-        sidx = jnp.int32(0)
-        for ax in tid_axes:
-            sidx = sidx * mesh.shape[ax] + jax.lax.axis_index(ax)
-        real_local = jnp.clip(n_real.astype(jnp.int32) - sidx * nbl,
-                              0, nbl)
-        blocks = jnp.minimum(blocks, real_local)
+        if mode == "andnot":
+            # Diffset work counter (ISSUE 6): charge only the
+            # *nonzero-mass* U blocks this shard's scan visited, like
+            # the single-device ``_blocked_diff_scan`` — the scan's
+            # ``blocks`` counts the alive-visited prefix, so
+            # ``k < blocks`` marks visited blocks.  Pad blocks are
+            # all-zero (zero mass), so they discount themselves and no
+            # real-block clamp is needed.
+            umass = su[:, :-1] - su[:, 1:]
+            visited = (jnp.arange(nbl, dtype=jnp.int32)[None, :]
+                       < blocks[:, None])
+            blocks = jnp.logical_and(umass > 0, visited).sum(
+                axis=1).astype(jnp.int32)
+        else:
+            # Discount this shard's all-zero pad tail from the scan
+            # count (the store pads the block axis to the shard count;
+            # pads never change counts or aliveness) so the psum'd
+            # ``blocks`` — the word_ops numerator — is consistently
+            # unpadded.
+            sidx = jnp.int32(0)
+            for ax in tid_axes:
+                sidx = sidx * mesh.shape[ax] + jax.lax.axis_index(ax)
+            real_local = jnp.clip(n_real.astype(jnp.int32) - sidx * nbl,
+                                  0, nbl)
+            blocks = jnp.minimum(blocks, real_local)
         zpc = _popcount32(Z).sum(axis=-1)           # (n, nb_local)
         c0 = zpc[:, 0]
         if mode == "and":

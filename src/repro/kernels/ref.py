@@ -98,6 +98,83 @@ def bitmap_intersect_es_ref(
                             mode=mode)
 
 
+# ---------------------------------------------------------------------------
+# Blocked diffset difference with zero-block skipping (dEclat, ISSUE 6)
+# ---------------------------------------------------------------------------
+#
+# The dedicated diffset scan shares Z/count/alive semantics with
+# ``_blocked_es_scan(mode="andnot")`` bit-for-bit; only the *work
+# counter* differs.  ``Z = U & ~V`` is identically zero on any block
+# where the U operand has no set bits, and diffset rows are exactly the
+# operands that go sparse on dense data (|d| = sup(parent) - sup(child)
+# shrinks as the class deepens), so a diffset engine skips those blocks
+# outright — the per-block U mass is free from the suffix table
+# (``su[k] - su[k+1]``).  ``blocks_done`` therefore counts only the
+# *nonzero-mass* blocks a live pair visits: that is the word_ops
+# numerator, the device analogue of the paper's #comparisons for the
+# DIFFERENCE_ES path.  Zero-mass blocks contribute no popcount and
+# cannot change the bound, so skipping them never perturbs counts,
+# aliveness or the scatter.
+
+
+def _blocked_diff_scan(U, V, suffix_u, rho_parent, thr):
+    """Blocked dEclat difference scan with a PER-PAIR threshold vector.
+
+    ``thr int32 (n_pairs,)``: a pair dies when its running difference
+    bound ``rho_parent - count`` drops below its own threshold
+    (``sup(Pxy) = rho(Px) - |D(Pxy)|`` only decreases as diff words
+    emit).  In valid mining ``count <= rho_parent`` always, so a
+    threshold of 0 never kills: that is the ES-disabled path.  Returns
+    ``(Z, counts, blocks_done, alive)`` where ``blocks_done`` is the
+    skip-aware work counter documented above."""
+    n_pairs = U.shape[0]
+    thr = jnp.asarray(thr, jnp.int32)
+    rho = rho_parent.astype(jnp.int32)
+
+    u_t = jnp.swapaxes(U, 0, 1)                     # (nb, n_pairs, bw)
+    v_t = jnp.swapaxes(V, 0, 1)
+    mass = (suffix_u[:, :-1] - suffix_u[:, 1:]).astype(jnp.int32)
+    m_t = jnp.swapaxes(mass, 0, 1)                  # (nb, n_pairs)
+
+    def step(carry, xs):
+        cnt, alive, blocks = carry
+        u_k, v_k, m_k = xs
+        z_k = u_k & ~v_k
+        pc = popcount32(z_k).sum(axis=-1)
+        cnt_new = jnp.where(alive, cnt + pc, cnt)
+        blocks = blocks + jnp.logical_and(alive, m_k > 0).astype(jnp.int32)
+        bound = rho - cnt_new
+        alive_new = jnp.logical_and(alive, bound >= thr)
+        z_out = jnp.where(alive[:, None], z_k, jnp.uint32(0))
+        return (cnt_new, alive_new, blocks), z_out
+
+    init = (jnp.zeros((n_pairs,), jnp.int32),
+            jnp.ones((n_pairs,), jnp.bool_),
+            jnp.zeros((n_pairs,), jnp.int32))
+    (cnt, alive, blocks), z_stack = jax.lax.scan(
+        step, init, (u_t, v_t, m_t))
+    Z = jnp.swapaxes(z_stack, 0, 1)
+    return Z, cnt, blocks, alive
+
+
+@jax.jit
+def bitmap_diff_es_ref(
+    U: jnp.ndarray,            # uint32 (n_pairs, n_blocks, bw)
+    V: jnp.ndarray,            # uint32 (n_pairs, n_blocks, bw)
+    suffix_u: jnp.ndarray,     # int32  (n_pairs, n_blocks + 1)
+    rho_parent: jnp.ndarray,   # int32  (n_pairs,)
+    minsup: jnp.ndarray,       # int32  scalar; <= 0 disables ES
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Blocked dEclat difference ``Z = U & ~V`` on the difference bound
+    ``rho_parent - count`` with zero-block skipping.  Z/count/alive are
+    bit-identical to ``bitmap_intersect_es_ref(mode="andnot")``; only
+    ``blocks_done`` differs (it skips zero-mass U blocks).  Returns
+    ``(Z, counts, blocks_done, alive_final)``."""
+    n_pairs = U.shape[0]
+    thr = jnp.broadcast_to(jnp.asarray(minsup, jnp.int32), (n_pairs,))
+    return _blocked_diff_scan(U, V, suffix_u, rho_parent, thr)
+
+
 def _survivor_mask(cnt, alive, rho_parent, minsup, *, mode: str):
     """The scatter gate shared by every fused dispatch (ISSUE 5).
 
@@ -155,6 +232,58 @@ def screen_and_intersect_ref(
     Z, cnt, blocks, alive = bitmap_intersect_es_ref(
         U, V, su, sv, rho_parent, es_minsup, mode=mode)
     keep = _survivor_mask(cnt, alive, rho_parent, minsup, mode=mode)
+    cap = rows.shape[0]
+    slots_eff = jnp.where(keep, slots, jnp.int32(cap))
+    child_suffix = suffix_popcounts(Z)
+    rows = rows.at[slots_eff].set(Z, mode="drop")
+    suffix = suffix.at[slots_eff].set(child_suffix, mode="drop")
+    return rows, suffix, cnt, blocks, alive
+
+
+@functools.partial(jax.jit, static_argnames=("early_stop",))
+def screen_and_diff_ref(
+    rows: jnp.ndarray,         # uint32 (capacity, n_blocks, bw) row store
+    suffix: jnp.ndarray,       # int32  (capacity, n_blocks + 1)
+    ua: jnp.ndarray,           # int32  (n_pairs,)  U operand row indices
+    vb: jnp.ndarray,           # int32  (n_pairs,)  V operand row indices
+    slots: jnp.ndarray,        # int32  (n_pairs,)  child dest rows (OOB drop)
+    rho_parent: jnp.ndarray,   # int32  (n_pairs,)  parent support
+    minsup: jnp.ndarray,       # int32  scalar (ES threshold AND scatter gate)
+    *,
+    early_stop: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
+    """Fused screen + blocked dEclat difference over a device row store —
+    the diffset dispatch oracle (ISSUE 6), scatter included.
+
+    The diffset sibling of :func:`screen_and_intersect_ref`: operands are
+    gathered by row index, the blocked scan runs on the *difference*
+    bound ``rho_parent - count`` (block 0 IS the one-block screen — the
+    bound after block 0 equals the screen bound ``rho - |U0 & ~V0|``),
+    and the child scatter is survivor-only under exactly the same mask.
+    Because ``support = rho - count`` the very same dispatch converts a
+    tidset subtree to diffsets: pass tidset operands ``U = T(a),
+    V = T(b)`` and the scattered child ``Z = T(a) & ~T(b)`` is the
+    level-2 diffset ``d(ab)`` (complement against the parent), so an
+    adaptive representation flip costs no extra round trip.
+
+    ``blocks_done`` is the skip-aware work counter of
+    :func:`bitmap_diff_es_ref`: only *nonzero-mass* U blocks a live pair
+    visits are charged (zero-mass blocks can never change the output —
+    that sparsity is exactly why diffsets win on dense data).
+    Z/count/alive — and therefore the result set — stay bit-identical
+    to ``screen_and_intersect_ref(mode="andnot")`` on the same
+    operands.
+
+    Returns ``(rows, suffix, counts, blocks_done, alive)``.
+    """
+    U = jnp.take(rows, ua, axis=0)
+    V = jnp.take(rows, vb, axis=0)
+    su = jnp.take(suffix, ua, axis=0)
+    es_minsup = minsup if early_stop else jnp.int32(0)
+    Z, cnt, blocks, alive = bitmap_diff_es_ref(
+        U, V, su, rho_parent, es_minsup)
+    keep = _survivor_mask(cnt, alive, rho_parent, minsup, mode="andnot")
     cap = rows.shape[0]
     slots_eff = jnp.where(keep, slots, jnp.int32(cap))
     child_suffix = suffix_popcounts(Z)
@@ -232,6 +361,10 @@ def screen_and_intersect_sharded_ref(
     dispatch clamp each shard's scan count to its real blocks, so
     ``word_ops`` and ``word_ops_full`` are consistently unpadded and
     an ES-off run reports exactly ``word_ops == word_ops_full``.
+    In mode "andnot" ``blocks`` is instead the skip-aware diffset work
+    counter (ISSUE 6): only the *nonzero-mass* U blocks each shard's
+    scan visited are charged, matching :func:`bitmap_diff_es_ref` —
+    pads are zero-mass, so they discount themselves.
     ``alive`` is True iff every shard finished its scan alive.
     """
     if mode not in ("and", "andnot"):
@@ -267,14 +400,27 @@ def screen_and_intersect_sharded_ref(
     count = cnt_f.reshape(n_pairs, n_shards).sum(axis=1)
     if n_real_blocks is None:
         n_real_blocks = nb
-    # Pad blocks live at each tail shard's local END (the global pad is
-    # the tail of the block axis), so clamping a shard's scan count to
-    # its real-block count discounts them exactly.
-    real_local = jnp.clip(
-        jnp.asarray(n_real_blocks, jnp.int32)
-        - jnp.arange(n_shards, dtype=jnp.int32) * nbl, 0, nbl)
-    blocks = jnp.minimum(blocks_f.reshape(n_pairs, n_shards),
-                         real_local[None, :]).sum(axis=1)
+    if mode == "andnot":
+        # Diffset work counter (ISSUE 6): charge only the *nonzero-mass*
+        # U blocks each shard's scan visited, like the single-device
+        # ``_blocked_diff_scan``.  ``blocks_f`` counts the alive-visited
+        # prefix, so ``k < blocks_f`` marks visited local blocks; pad
+        # blocks are all-zero (zero mass) and discount themselves, so no
+        # real-block clamp is needed.
+        umass = su[:, :, :-1] - su[:, :, 1:]        # (n, S, nbl)
+        visited = (jnp.arange(nbl, dtype=jnp.int32)[None, None, :]
+                   < blocks_f.reshape(n_pairs, n_shards)[:, :, None])
+        blocks = jnp.logical_and(umass > 0, visited).sum(
+            axis=(1, 2)).astype(jnp.int32)
+    else:
+        # Pad blocks live at each tail shard's local END (the global pad
+        # is the tail of the block axis), so clamping a shard's scan
+        # count to its real-block count discounts them exactly.
+        real_local = jnp.clip(
+            jnp.asarray(n_real_blocks, jnp.int32)
+            - jnp.arange(n_shards, dtype=jnp.int32) * nbl, 0, nbl)
+        blocks = jnp.minimum(blocks_f.reshape(n_pairs, n_shards),
+                             real_local[None, :]).sum(axis=1)
     alive = alive_f.reshape(n_pairs, n_shards).all(axis=1)
     c0 = zpc[:, :, 0]                               # (n, S) per-shard block 0
     if mode == "and":

@@ -69,7 +69,7 @@ def test_neighbor_sampler_validity():
     nbrs, mask = s.sample_hop(seeds, 5)
     # every masked-in neighbor must be a real in-neighbor
     adj = {}
-    for src, dst in zip(g.edge_src, g.edge_dst):
+    for src, dst in zip(g.edge_src, g.edge_dst, strict=True):
         adj.setdefault(int(dst), set()).add(int(src))
     for i, seed in enumerate(seeds):
         for j in range(5):

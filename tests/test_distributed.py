@@ -138,11 +138,14 @@ def _random_db(seed, n_items=(4, 9), n_trans=(10, 60)):
     return db, minsup
 
 
+@pytest.mark.parametrize("mode", ["and", "andnot"])
 @pytest.mark.parametrize("early_stop", [False, True])
-def test_fused_sharded_dispatch_matches_ref(early_stop):
+def test_fused_sharded_dispatch_matches_ref(early_stop, mode):
     """ops.make_screen_and_intersect_sharded == kernels.ref oracle,
-    bit-exact across minsup values and the in-dispatch ES flag (1 shard
-    here; the 8-shard version runs in the subprocess test below)."""
+    bit-exact across minsup values, the in-dispatch ES flag and both
+    representations (tidset "and" / diffset "andnot", ISSUE 6) — 1
+    shard here; the 8-shard version runs in the subprocess test below."""
+    from repro.core.bitmap import popcount32_np
     from repro.core.rowstore import DeviceRowStore
     from repro.kernels import ops, ref
 
@@ -154,34 +157,51 @@ def test_fused_sharded_dispatch_matches_ref(early_stop):
     ua = r.integers(0, 16, n).astype(np.int32)
     vb = r.integers(0, 16, n).astype(np.int32)
     slots = np.arange(16, 16 + n, dtype=np.int32)
-    rho = r.integers(0, 100, n).astype(np.int32)
+    if mode == "and":
+        rho = r.integers(0, 100, n).astype(np.int32)
+    else:
+        # diffset invariant: |U & ~V| <= |U| = rho, so support >= 0
+        rho = popcount32_np(rows_np).reshape(16, -1).sum(1).astype(
+            np.int32)[ua]
 
     fused = ops.make_screen_and_intersect_sharded(
-        mesh, tid_axes=("data", "model"), early_stop=early_stop)
+        mesh, tid_axes=("data", "model"), mode=mode,
+        early_stop=early_stop)
     for minsup in (0, 8, 40, 200):
         store = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
         rows0 = np.asarray(store.rows)
         suf0 = np.asarray(store.suffix)
         er, esuf, eb, ec, ebl, eal = ref.screen_and_intersect_sharded_ref(
             rows0, suf0, ua, vb, slots, rho, jnp.int32(minsup),
-            n_shards=store.n_shards, early_stop=early_stop)
+            n_shards=store.n_shards, mode=mode, early_stop=early_stop)
         gr, gs, gb, gc, gbl, gal = fused(store.rows, store.suffix, ua, vb,
                                          slots, rho, minsup)
-        key = (early_stop, minsup)
+        key = (early_stop, mode, minsup)
         assert np.array_equal(np.asarray(gb), np.asarray(eb)), key
         assert np.array_equal(np.asarray(gc), np.asarray(ec)), key
         assert np.array_equal(np.asarray(gbl), np.asarray(ebl)), key
         assert np.array_equal(np.asarray(gal), np.asarray(eal)), key
         assert np.array_equal(np.asarray(gr), np.asarray(er)), key
         assert np.array_equal(np.asarray(gs), np.asarray(esuf)), key
-        # screen soundness: the bound dominates the exact count for
-        # pairs that stayed alive (dead counts are frozen partials)
+        # screen soundness for alive pairs (dead counts are frozen
+        # partials): "and" bounds the count from above, "andnot" bounds
+        # the support rho - count from above
         gb_, gc_, gal_ = np.asarray(gb), np.asarray(gc), np.asarray(gal)
-        assert (gb_[gal_] >= gc_[gal_]).all(), key
+        if mode == "and":
+            assert (gb_[gal_] >= gc_[gal_]).all(), key
+        else:
+            assert (gb_[gal_] >= (rho - gc_)[gal_]).all(), key
         if not early_stop:
-            # ES off: every pair walks every local block on every shard
-            assert (np.asarray(gbl) == store.n_blocks).all(), key
             assert np.asarray(gal).all(), key
+            gbl_ = np.asarray(gbl)
+            if mode == "and":
+                # ES off: every pair walks every local block, all shards
+                assert (gbl_ == store.n_blocks).all(), key
+            else:
+                # diffset work counter is skip-aware even with ES off:
+                # only visited blocks with positive U mass are charged
+                mass = popcount32_np(rows0).sum(axis=2)
+                assert np.array_equal(gbl_, (mass[ua] > 0).sum(1)), key
 
 
 def test_sharded_row_store_grow_preserves_sharding_and_contents():
@@ -350,33 +370,66 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
             nonzero_wof += st.word_ops_full > 0
     assert nonzero_wof > 0      # the padding bug would have inflated these
 
+    # density-adaptive representation switching (ISSUE 6) on 8 shards:
+    # declat and adaptive miners match the bruteforce oracle exactly and
+    # every pair chunk is still ONE fused dispatch ("and" + "andnot"
+    # wrappers together account for all device calls)
+    for trial in range(2):
+        n_items = rng.randint(5, 8)
+        n_trans = rng.randint(20, 50)
+        db = [[i for i in range(n_items) if rng.random() < 0.6]
+              for _ in range(n_trans)]
+        db = [t for t in db if t]
+        minsup = rng.randint(2, max(2, len(db) // 3))
+        bf = mine_bruteforce(db, minsup)
+        for scheme, dd in (("declat", None), ("adaptive", 0.3)):
+            for es in (False, True):
+                m = DistributedMiner(mesh, early_stop=es, capacity=512,
+                                     block_words=2, scheme=scheme,
+                                     diff_density=dd,
+                                     diff_hysteresis=0.1)
+                calls = [0]
+                for attr in ("_fused", "_fused_diff"):
+                    def counted(*a, _i=getattr(m, attr), _c=calls, **k):
+                        _c[0] += 1
+                        return _i(*a, **k)
+                    setattr(m, attr, counted)
+                out, st = m.mine(db, minsup)
+                assert out == bf, (trial, scheme, es)
+                assert calls[0] == st.device_calls >= 1, (trial, scheme, es)
+
     # fused dispatch is bit-exact against the 8-shard ref oracle,
-    # in-dispatch shard-local ES on and off
+    # in-dispatch shard-local ES on and off, both representations
     r = np.random.default_rng(0)
     rows_np = r.integers(0, 2**32, (16, 8, 4), dtype=np.uint64
                          ).astype(np.uint32)
     ua = r.integers(0, 16, 12).astype(np.int32)
     vb = r.integers(0, 16, 12).astype(np.int32)
     slots = np.arange(16, 28, dtype=np.int32)
-    rho = r.integers(0, 100, 12).astype(np.int32)
-    for es in (False, True):
-        for minsup in (0, 64, 400):
-            store = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
-            assert store.n_shards == 8
-            rows0, suf0 = np.asarray(store.rows), np.asarray(store.suffix)
-            er, esuf, eb, ec, ebl, eal = ref.screen_and_intersect_sharded_ref(
-                rows0, suf0, ua, vb, slots, rho, np.int32(minsup),
-                n_shards=8, early_stop=es)
-            fused = ops.make_screen_and_intersect_sharded(
-                mesh, tid_axes=("data", "model"), early_stop=es)
-            gr, gs, gb, gc, gbl, gal = fused(
-                store.rows, store.suffix, ua, vb, slots, rho, minsup)
-            assert np.array_equal(np.asarray(gb), np.asarray(eb)), (es, minsup)
-            assert np.array_equal(np.asarray(gc), np.asarray(ec)), (es, minsup)
-            assert np.array_equal(np.asarray(gbl), np.asarray(ebl)), (es, minsup)
-            assert np.array_equal(np.asarray(gal), np.asarray(eal)), (es, minsup)
-            assert np.array_equal(np.asarray(gr), np.asarray(er)), (es, minsup)
-            assert np.array_equal(np.asarray(gs), np.asarray(esuf)), (es, minsup)
+    rho_and = r.integers(0, 100, 12).astype(np.int32)
+    rho_diff = popcount32_np(rows_np).reshape(16, -1).sum(1).astype(
+        np.int32)[ua]
+    for mode, rho in (("and", rho_and), ("andnot", rho_diff)):
+        for es in (False, True):
+            for minsup in (0, 64, 400):
+                store = DeviceRowStore(rows_np, capacity=32, mesh=mesh)
+                assert store.n_shards == 8
+                rows0, suf0 = np.asarray(store.rows), np.asarray(store.suffix)
+                er, esuf, eb, ec, ebl, eal = ref.screen_and_intersect_sharded_ref(
+                    rows0, suf0, ua, vb, slots, rho, np.int32(minsup),
+                    n_shards=8, mode=mode, early_stop=es)
+                fused = ops.make_screen_and_intersect_sharded(
+                    mesh, tid_axes=("data", "model"), mode=mode,
+                    early_stop=es)
+                gr, gs, gb, gc, gbl, gal = fused(
+                    store.rows, store.suffix, ua, vb, slots, rho, minsup)
+                key = (mode, es, minsup)
+                assert np.array_equal(np.asarray(gb), np.asarray(eb)), key
+                assert np.array_equal(np.asarray(gc), np.asarray(ec)), key
+                assert np.array_equal(np.asarray(gbl), np.asarray(ebl)), key
+                assert np.array_equal(np.asarray(gal), np.asarray(eal)), key
+                assert np.array_equal(np.asarray(gr), np.asarray(er)), key
+                assert np.array_equal(np.asarray(gs), np.asarray(esuf)), key
 
     # sharded slab growth preserves the NamedSharding + contents
     store2 = DeviceRowStore(rows_np, capacity=32, mesh=mesh)

@@ -103,11 +103,20 @@ def _engines(backend: str):
         eng[f"bitmap-{s}"] = (lambda s: lambda db, ms, es: mine_bitmap(
             db, ms, scheme=s, early_stop=es, block_words=4,
             backend=backend))(s)
+    # density-adaptive tidset->diffset switching (ISSUE 6); the low
+    # threshold + wide hysteresis forces flips in the dense regimes and
+    # leaves the sparse ones tidset, so both paths are exercised
+    eng["bitmap-adaptive"] = lambda db, ms, es: mine_bitmap(
+        db, ms, scheme="adaptive", diff_density=0.3, diff_hysteresis=0.1,
+        early_stop=es, block_words=4, backend=backend)
     eng["device-prepost"] = lambda db, ms, es: mine_prepost_device(
         db, ms, early_stop=es, backend=backend)
     if backend == "jnp":                 # shard_map path is jnp-only
         eng["distributed-eclat"] = lambda db, ms, es: DistributedMiner(
             _mesh(), early_stop=es, block_words=4).mine(db, ms)
+        eng["distributed-adaptive"] = lambda db, ms, es: DistributedMiner(
+            _mesh(), early_stop=es, block_words=4, scheme="adaptive",
+            diff_density=0.3, diff_hysteresis=0.1).mine(db, ms)
     return eng
 
 
@@ -239,7 +248,7 @@ def test_non_es_runs_report_zero_deaths_every_engine(regime):
 
     for seed in range(3):
         db, minsup = gen_db(regime, seed)
-        for scheme in ("eclat", "declat"):
+        for scheme in ("eclat", "declat", "adaptive"):
             _, st = mine_bitmap(db, minsup, scheme=scheme, early_stop=False,
                                 block_words=4)
             assert st.deaths == 0, (regime, seed, scheme)
@@ -275,6 +284,10 @@ def test_survivor_only_scatter_telemetry(backend):
                         backend=backend),
                     "bitmap-declat": mine_bitmap(
                         db, minsup, "declat", early_stop=es, block_words=4,
+                        backend=backend),
+                    "bitmap-adaptive": mine_bitmap(
+                        db, minsup, "adaptive", diff_density=0.3,
+                        diff_hysteresis=0.1, early_stop=es, block_words=4,
                         backend=backend),
                     "device-prepost": mine_prepost_device(
                         db, minsup, early_stop=es, backend=backend),
@@ -416,7 +429,7 @@ def _check_rowstore_compaction(seed):
     assert sorted(new_ids.tolist()) == list(range(len(live)))  # dense
     dead = np.setdiff1d(np.arange(old_cap), np.asarray(live, np.int64))
     assert (mapping[dead] == -1).all()
-    for s, ni in zip(live, new_ids):
+    for s, ni in zip(live, new_ids, strict=True):
         assert np.array_equal(np.asarray(store.rows[int(ni)]), before[s][0])
         assert np.array_equal(np.asarray(store.suffix[int(ni)]),
                               before[s][1])
@@ -440,7 +453,7 @@ def _check_pool_compaction(seed):
         arrays = [r.integers(0, 1000, (ln, 3)).astype(np.int32)
                   for ln in lens]
         pool.write_rows(rows, arrays)
-        for row, a in zip(rows, arrays):
+        for row, a in zip(rows, arrays, strict=True):
             live[int(row)] = a
         drop = rng.sample(sorted(live), rng.randint(0, len(live) // 2))
         pool.free_rows(drop)
@@ -512,6 +525,11 @@ def test_compaction_forced_engines_match_bruteforce(regime):
             scheme="eclat", early_stop=True, block_words=2, pair_chunk=8,
             compact_occupancy=1.0).mine(db, minsup)
         assert out == expected, (regime, seed, "bitmap")
+        out, _ = BitmapMiner(
+            scheme="adaptive", diff_density=0.3, diff_hysteresis=0.1,
+            early_stop=True, block_words=2, pair_chunk=8,
+            compact_occupancy=1.0).mine(db, minsup)
+        assert out == expected, (regime, seed, "bitmap-adaptive")
         out, st_p = DevicePrePost(
             early_stop=True, pair_chunk=8,
             compact_occupancy=1.0).mine(db, minsup)

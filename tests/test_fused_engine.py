@@ -66,16 +66,22 @@ def test_one_device_dispatch_per_pair_chunk(monkeypatch, scheme):
     never called by the miner."""
     calls = {"fused": 0, "legacy": 0}
     real = ops.screen_and_intersect
+    real_diff = ops.screen_and_diff
 
     def counting_fused(*a, **k):
         calls["fused"] += 1
         return real(*a, **k)
+
+    def counting_diff(*a, **k):
+        calls["fused"] += 1
+        return real_diff(*a, **k)
 
     def forbidden(*a, **k):
         calls["legacy"] += 1
         raise AssertionError("legacy two-dispatch path used")
 
     monkeypatch.setattr(ops, "screen_and_intersect", counting_fused)
+    monkeypatch.setattr(ops, "screen_and_diff", counting_diff)
     monkeypatch.setattr(ops, "screen_pairs", forbidden)
     monkeypatch.setattr(ops, "bitmap_intersect_es", forbidden)
     monkeypatch.setattr(ops, "bitmap_intersect_full", forbidden)

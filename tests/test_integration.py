@@ -130,3 +130,12 @@ def test_mining_cli(tmp_path, capsys):
         outs[engine] = _json.load(open(tmp_path / f"{engine}.json"))
     assert outs["oracle"] == outs["bitmap"]
     assert outs["oracle"]["2"] == 5
+    # adaptive scheme + its knobs flow through to the bitmap engine
+    # (oracle has no adaptive mode: the CLI maps it to eclat there)
+    _sys.argv = ["cli", "--input", str(f), "--minsup", "2",
+                 "--engine", "bitmap", "--scheme", "adaptive",
+                 "--block-words", "1", "--diff-density", "0.3",
+                 "--diff-hysteresis", "0.05",
+                 "--json-out", str(tmp_path / "adaptive.json")]
+    cli.main()
+    assert _json.load(open(tmp_path / "adaptive.json")) == outs["oracle"]

@@ -8,9 +8,11 @@ from hypothesis import given, settings, strategies as st
 from repro.core.bitmap import (pack_tidlists, suffix_popcounts_np,
                                popcount32_np, unpack_row)
 from repro.kernels import ops
-from repro.kernels.ref import (bitmap_intersect_es_ref, flash_attention_ref,
-                               embedding_bag_ref, screen_pairs_ref,
-                               screen_and_intersect_ref)
+from repro.kernels.ref import (bitmap_intersect_es_ref, bitmap_diff_es_ref,
+                               flash_attention_ref, embedding_bag_ref,
+                               screen_pairs_ref, screen_and_intersect_ref,
+                               screen_and_diff_ref)
+from repro.kernels.bitmap_diff import bitmap_diff_es
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.segment_embed import embedding_bag
 
@@ -45,7 +47,7 @@ def test_bitmap_kernel_matches_ref(mode, n_blocks, bw):
                                     mode=mode)
         p = ops.bitmap_intersect_es(U, V, su, sv, rho, jnp.int32(minsup),
                                     mode=mode, backend="pallas")
-        for name, a, b in zip(("Z", "cnt", "blocks", "alive"), r, p):
+        for name, a, b in zip(("Z", "cnt", "blocks", "alive"), r, p, strict=True):
             assert np.array_equal(np.asarray(a), np.asarray(b)), (
                 mode, minsup, name)
 
@@ -115,6 +117,117 @@ def test_fused_screen_and_intersect_matches_ref(backend, es, mode,
         Zr = np.asarray(Zr)
         support = (np.asarray(cnt) if mode == "and"
                    else rho - np.asarray(cnt))
+        keep = np.logical_and(np.asarray(alive), support >= minsup)
+        for i, s in enumerate(slots):
+            if s >= cap:
+                continue
+            if keep[i]:
+                assert np.array_equal(rows[s], Zr[i]), key
+                assert np.array_equal(
+                    suffix[s], suffix_popcounts_np(Zr[i:i+1])[0]), key
+            else:
+                assert np.array_equal(rows[s], store0[s]), (key, i)
+                assert np.array_equal(suffix[s], suffix0[s]), (key, i)
+        untouched = [r for r in range(cap) if r not in set(slots.tolist())]
+        assert np.array_equal(rows[untouched], store0[untouched]), key
+        assert np.array_equal(suffix[untouched], suffix0[untouched]), key
+
+
+# ---------------------------------------------------------------------------
+# diffset (dEclat) kernels: bit-exact vs the ref, skip-aware work counter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_blocks,bw", [(1, 128), (3, 128), (6, 8)])
+def test_bitmap_diff_kernel_matches_ref(n_blocks, bw):
+    """Pallas diff kernel == bitmap_diff_es_ref bit-for-bit across shapes
+    and minsup (ISSUE 6): Z, count, skip-aware blocks and aliveness."""
+    rng = np.random.default_rng(23)
+    n_pairs = 9
+    U = _random_bitmaps(rng, n_pairs, n_blocks, bw)
+    V = _random_bitmaps(rng, n_pairs, n_blocks, bw)
+    su = suffix_popcounts_np(U)
+    rho = su[:, 0].astype(np.int32)     # parent support: |d| <= rho holds
+    n_trans = n_blocks * bw * 32
+    for minsup in (0, 1, n_trans // 64, n_trans // 8, n_trans):
+        r = bitmap_diff_es_ref(U, V, su, rho, jnp.int32(minsup))
+        p = bitmap_diff_es(U, V, su, rho, jnp.int32(minsup))
+        for name, a, b in zip(("Z", "cnt", "blocks", "alive"), r, p, strict=True):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                minsup, name)
+
+
+def test_diff_scan_skips_zero_mass_u_blocks():
+    """The diff scan is bit-identical to the legacy andnot scan on Z /
+    count / aliveness, but its work counter charges only visited blocks
+    whose U suffix mass is positive (Z = U & ~V is zero wherever U is) —
+    the representation saving the dense word_ops win comes from."""
+    rng = np.random.default_rng(31)
+    n_pairs, n_blocks, bw = 12, 6, 8
+    U = _random_bitmaps(rng, n_pairs, n_blocks, bw, density=0.2)
+    U[:, 1] = 0                          # skippable zero-mass U blocks
+    U[:, 4] = 0
+    V = _random_bitmaps(rng, n_pairs, n_blocks, bw)
+    su, sv = suffix_popcounts_np(U), suffix_popcounts_np(V)
+    rho = su[:, 0].astype(np.int32)
+    mass = (su[:, :-1] - su[:, 1:]).astype(np.int64)
+    for minsup in (0, 5, 40):
+        Zd, cd, bd, ad = bitmap_diff_es_ref(U, V, su, rho,
+                                            jnp.int32(minsup))
+        Za, ca, ba, aa = bitmap_intersect_es_ref(U, V, su, sv, rho,
+                                                 jnp.int32(minsup),
+                                                 mode="andnot")
+        assert np.array_equal(np.asarray(Zd), np.asarray(Za)), minsup
+        assert np.array_equal(np.asarray(cd), np.asarray(ca)), minsup
+        assert np.array_equal(np.asarray(ad), np.asarray(aa)), minsup
+        bd, ba = np.asarray(bd), np.asarray(ba)
+        assert (bd <= ba).all(), minsup
+        # aliveness is a prefix property, so the andnot scan's visited
+        # set is exactly range(ba[i]); the diff counter drops the
+        # zero-mass members of that set
+        for i in range(n_pairs):
+            expect = int(((np.arange(n_blocks) < ba[i])
+                          & (mass[i] > 0)).sum())
+            assert bd[i] == expect, (minsup, i)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("es", [False, True])
+@pytest.mark.parametrize("n_blocks,bw", [(1, 128), (3, 128), (5, 8)])
+def test_fused_screen_and_diff_matches_ref(backend, es, n_blocks, bw):
+    """ops.screen_and_diff == screen_and_diff_ref bit-for-bit, survivor
+    gated scatter included (ISSUE 6): difference rows and suffix tables
+    land at `slots` ONLY for pairs whose support rho - |d| cleared
+    minsup and that finished alive; dead pairs' slots, padding slots
+    (>= cap) and untouched store rows are all left untouched."""
+    rng = np.random.default_rng(13)
+    cap, n_pairs = 32, 9
+    store0 = _random_bitmaps(rng, cap, n_blocks, bw)
+    suffix0 = suffix_popcounts_np(store0)
+    ua = rng.integers(0, 12, n_pairs).astype(np.int32)
+    vb = rng.integers(0, 12, n_pairs).astype(np.int32)
+    slots = np.arange(12, 12 + n_pairs, dtype=np.int32)
+    slots[-1] = cap + 3          # OOB sentinel: must be dropped
+    rho = suffix0[ua, 0].astype(np.int32)
+    n_trans = n_blocks * bw * 32
+    for minsup in (0, 1, n_trans // 64, n_trans // 8):
+        rows_r, suf_r, cnt_r, blocks_r, alive_r = screen_and_diff_ref(
+            store0, suffix0, ua, vb, slots, rho, jnp.int32(minsup),
+            early_stop=es)
+        rows, suffix, cnt, blocks, alive = ops.screen_and_diff(
+            jnp.asarray(store0), jnp.asarray(suffix0), ua, vb, slots, rho,
+            jnp.int32(minsup), early_stop=es, backend=backend)
+        rows, suffix = np.asarray(rows), np.asarray(suffix)
+        key = (backend, es, minsup)
+        assert np.array_equal(np.asarray(cnt), np.asarray(cnt_r)), key
+        assert np.array_equal(np.asarray(blocks), np.asarray(blocks_r)), key
+        assert np.array_equal(np.asarray(alive), np.asarray(alive_r)), key
+        assert np.array_equal(rows, np.asarray(rows_r)), key
+        assert np.array_equal(suffix, np.asarray(suf_r)), key
+        es_minsup = minsup if es else 0
+        Zr, _, _, _ = bitmap_diff_es_ref(
+            store0[ua], store0[vb], suffix0[ua], rho, jnp.int32(es_minsup))
+        Zr = np.asarray(Zr)
+        support = rho - np.asarray(cnt)
         keep = np.logical_and(np.asarray(alive), support >= minsup)
         for i, s in enumerate(slots):
             if s >= cap:
@@ -233,8 +346,8 @@ def test_nlist_extend_matches_ref(backend, es, lu, lv):
     v_off = rng.integers(256, 512 - lv, n_pairs).astype(np.int32)
     u_len = rng.integers(1, lu + 1, n_pairs).astype(np.int32)
     v_len = rng.integers(1, lv + 1, n_pairs).astype(np.int32)
-    codes = _random_pool(rng, cap, list(zip(u_off, u_len))
-                         + list(zip(v_off, v_len)))
+    codes = _random_pool(rng, cap, list(zip(u_off, u_len, strict=True))
+                         + list(zip(v_off, v_len, strict=True)))
     out_off = (512 + lu * np.arange(n_pairs)).astype(np.int32)
     out_off[-1] = cap + 5            # OOB sentinel: must be dropped
     rho = rng.integers(0, 120, n_pairs).astype(np.int32)
@@ -247,7 +360,8 @@ def test_nlist_extend_matches_ref(backend, es, lu, lv):
                              v_len, out_off, rho, jnp.int32(minsup),
                              lu=lu, lv=lv, early_stop=es, backend=backend)
         for name, a, b in zip(("codes", "child_len", "support",
-                               "comparisons", "checks", "alive"), r, g):
+                               "comparisons", "checks", "alive"), r, g,
+                               strict=True):
             assert np.array_equal(np.asarray(a), np.asarray(b)), (
                 backend, es, minsup, name)
         # survivor-only scatter (ISSUE 5): only extents of pairs whose
@@ -282,8 +396,8 @@ def test_nlist_presize_scatter_split_matches_ref_and_extend(backend, es):
     v_off = rng.integers(256, 512 - lv, n_pairs).astype(np.int32)
     u_len = rng.integers(1, lu + 1, n_pairs).astype(np.int32)
     v_len = rng.integers(1, lv + 1, n_pairs).astype(np.int32)
-    codes = _random_pool(rng, cap, list(zip(u_off, u_len))
-                         + list(zip(v_off, v_len)))
+    codes = _random_pool(rng, cap, list(zip(u_off, u_len, strict=True))
+                         + list(zip(v_off, v_len, strict=True)))
     rho = rng.integers(0, 120, n_pairs).astype(np.int32)
 
     for minsup in (0, 1, 10, 80):
@@ -294,7 +408,8 @@ def test_nlist_presize_scatter_split_matches_ref_and_extend(backend, es):
                               v_len, rho, jnp.int32(minsup),
                               lu=lu, lv=lv, early_stop=es, backend=backend)
         for name, a, b in zip(("out_slot", "child_len", "support",
-                               "comparisons", "checks", "alive"), r, g):
+                               "comparisons", "checks", "alive"), r, g,
+                               strict=True):
             assert np.array_equal(np.asarray(a), np.asarray(b)), (
                 backend, es, minsup, name)
         out_slot, child_len, support = (np.asarray(g[0]),
@@ -362,7 +477,7 @@ def test_nlist_merge_pallas_matches_ref(es):
                                 jnp.int32(minsup), early_stop=es,
                                 backend="pallas")
         for name, a, b in zip(("out_slot", "support", "cmps", "checks",
-                               "alive"), r, p):
+                               "alive"), r, p, strict=True):
             assert np.array_equal(np.asarray(a), np.asarray(b)), (
                 es, minsup, name)
 

@@ -146,7 +146,7 @@ def test_pool_growth_preserves_live_rows_bit_for_bit():
     # force growth well past the current capacity
     big = pool.alloc_rows([cap0, cap0])
     assert pool.grows >= 1 and pool.capacity > cap0
-    for r, a, b in zip(rows, arrays, before):
+    for r, a, b in zip(rows, arrays, before, strict=True):
         assert np.array_equal(pool.read_row(r), a)
         assert np.array_equal(pool.read_row(r), b)
     pool.free_rows(big)

@@ -108,7 +108,8 @@ def test_checkpoint_roundtrip(tmp_path):
     template = jax.tree.map(lambda x: jnp.zeros_like(x), state)
     restored, step, extra = restore_checkpoint(d, template)
     assert step == 7 and extra == {"mesh": [1, 1]}
-    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored),
+                    strict=True):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 

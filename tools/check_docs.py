@@ -1,0 +1,113 @@
+"""Docs consistency checks, run in the CI lint job (ISSUE 6 satellite).
+
+Two guards:
+
+1. **Relative links resolve.**  Every relative markdown link target in
+   README.md, ROADMAP.md and docs/*.md must exist on disk (anchors are
+   stripped; external http(s)/mailto links are skipped).  A renamed or
+   dropped file breaks the build instead of leaving a dead link.
+
+2. **docs/ARCHITECTURE.md stays in sync with the scheduler client
+   protocol.**  The architecture document must name every public
+   protocol method a ``FrontierScheduler`` client implements — the
+   method set is read from ``core/frontier.py``'s class docstring
+   contract (the miners implement it directly, so there is no ABC to
+   introspect), kept here as the single explicit list.  Adding a
+   protocol method without documenting it fails lint.
+
+Usage: ``python tools/check_docs.py`` (exit 1 on any failure).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DOC_FILES = ["README.md", "ROADMAP.md", "benchmarks/README.md"]
+
+# The FrontierScheduler client protocol (core/frontier.py).  When a
+# method is added there, document it in docs/ARCHITECTURE.md and extend
+# this list — that is the point of the guard.
+PROTOCOL_METHODS = [
+    "pair_columns",
+    "evaluate_pairs",
+    "make_class",
+    "emit",
+    "release",
+    "maybe_compact",
+    "chunk_sort_key",
+]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _iter_doc_paths():
+    for name in DOC_FILES:
+        p = REPO / name
+        if p.exists():
+            yield p
+    yield from sorted((REPO / "docs").glob("*.md"))
+
+
+def check_links() -> list:
+    failures = []
+    for doc in _iter_doc_paths():
+        text = doc.read_text(encoding="utf-8")
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (doc.parent / rel).exists():
+                failures.append(
+                    f"{doc.relative_to(REPO)}: dead link -> {target}")
+    return failures
+
+
+def check_protocol_documented() -> list:
+    arch = REPO / "docs" / "ARCHITECTURE.md"
+    if not arch.exists():
+        return ["docs/ARCHITECTURE.md is missing"]
+    text = arch.read_text(encoding="utf-8")
+    return [
+        f"docs/ARCHITECTURE.md: client-protocol method "
+        f"`{m}` is not documented"
+        for m in PROTOCOL_METHODS if m not in text
+    ]
+
+
+def check_protocol_list_current() -> list:
+    """The explicit list above must itself cover every method the
+    frontier module's protocol docstring declares (``name(...) ->`` or
+    ``name(...)`` lines in the module docstring's protocol section)."""
+    frontier = REPO / "src" / "repro" / "core" / "frontier.py"
+    text = frontier.read_text(encoding="utf-8")
+    declared = set(re.findall(r"``(\w+)\([^)]*\)", text))
+    declared -= {"min", "max", "ClassNode", "EngineAccounting"}
+    missing = declared - set(PROTOCOL_METHODS) - {
+        "drain_group", "run", "push", "remap", "_assemble"}
+    return [
+        f"tools/check_docs.py: PROTOCOL_METHODS is stale — frontier.py "
+        f"declares `{m}` in its protocol docs" for m in sorted(missing)
+    ]
+
+
+def main() -> None:
+    failures = (check_links() + check_protocol_documented()
+                + check_protocol_list_current())
+    if failures:
+        print("DOCS CHECK FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        sys.exit(1)
+    n_docs = len(list(_iter_doc_paths()))
+    print(f"docs ok: links resolve in {n_docs} files, "
+          f"{len(PROTOCOL_METHODS)} protocol methods documented",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()
