@@ -223,6 +223,74 @@ def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
               f"(tidset@bw1={st_tes.word_ops})",
               file=sys.stderr)
 
+    # Dispatch-pipeline demo (ISSUE 7): at the default pair_chunk every
+    # DFS wave drains into one group (nothing to overlap), so the
+    # occupancy demo runs the powerlaw regime at a small chunk where
+    # each wave splits into several groups and the double-buffered ring
+    # actually interleaves host assembly with device execution.  The
+    # occupancy metric is deterministic (ring state at dispatch, not
+    # timing), so it is assert-able in CI; assemble_s/resolve_s are the
+    # informational assembly-vs-device time split
+    # (check_bench_regression.py ignores fields it does not know).
+    pl_db, pl_ms = _smoke_datasets()["powerlaw"]
+    pipe_chunk = 1024
+    _, st_ser = mine_bitmap(pl_db, pl_ms, "eclat", early_stop=True,
+                            block_words=8, pair_chunk=pipe_chunk,
+                            inflight=1)
+    _, st_pipe = mine_bitmap(pl_db, pl_ms, "eclat", early_stop=True,
+                             block_words=8, pair_chunk=pipe_chunk,
+                             inflight=2)
+    report["pipeline"] = {
+        "regime": "powerlaw", "pair_chunk": pipe_chunk,
+        "serial": {"device_occupancy": st_ser.device_occupancy,
+                   "assemble_s": round(st_ser.assemble_s, 6),
+                   "resolve_s": round(st_ser.resolve_s, 6)},
+        "pipelined": {"device_occupancy": st_pipe.device_occupancy,
+                      "assemble_s": round(st_pipe.assemble_s, 6),
+                      "resolve_s": round(st_pipe.resolve_s, 6)},
+    }
+
+    # Per-bucket chunk-width autotuning (ISSUE 7): at a deliberately
+    # small base pair_chunk the width table widens every chunk (smoke
+    # operands are far below the reference operand size), collapsing
+    # device_calls at bit-identical per-pair work.
+    auto_chunk = 64
+    auto = {"regime": "powerlaw", "base_pair_chunk": auto_chunk}
+    _, st_boff = mine_bitmap(pl_db, pl_ms, "eclat", early_stop=True,
+                             block_words=8, pair_chunk=auto_chunk,
+                             autotune_chunk=False)
+    _, st_bon = mine_bitmap(pl_db, pl_ms, "eclat", early_stop=True,
+                            block_words=8, pair_chunk=auto_chunk,
+                            autotune_chunk=True)
+    auto["bitmap"] = {
+        "device_calls": {"off": st_boff.device_calls,
+                         "on": st_bon.device_calls},
+        "word_ops": {"off": st_boff.word_ops, "on": st_bon.word_ops},
+        "scatter_words": {"off": st_boff.scatter_words,
+                          "on": st_bon.scatter_words},
+    }
+    _, st_poff = mine_prepost_device(pl_db, pl_ms, early_stop=True,
+                                     pair_chunk=auto_chunk,
+                                     autotune_chunk=False)
+    _, st_pon = mine_prepost_device(pl_db, pl_ms, early_stop=True,
+                                    pair_chunk=auto_chunk,
+                                    autotune_chunk=True)
+    auto["prepost"] = {
+        "device_calls": {"off": st_poff.device_calls,
+                         "on": st_pon.device_calls},
+        "comparisons": {"off": st_poff.comparisons,
+                        "on": st_pon.comparisons},
+        "scatter_words": {"off": st_poff.scatter_words,
+                          "on": st_pon.scatter_words},
+    }
+    report["autotune"] = auto
+    print(f"smoke pipeline: occupancy {st_ser.device_occupancy:.2f} -> "
+          f"{st_pipe.device_occupancy:.2f} @chunk={pipe_chunk}; "
+          f"autotune device_calls bitmap "
+          f"{st_boff.device_calls}->{st_bon.device_calls}, prepost "
+          f"{st_poff.device_calls}->{st_pon.device_calls} "
+          f"@chunk={auto_chunk}", file=sys.stderr)
+
     # Write the artifact BEFORE the acceptance asserts: when a gate
     # trips, CI must still upload the telemetry needed to debug it.
     with open(out_path, "w") as f:
@@ -254,6 +322,28 @@ def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
     assert da["es"]["word_ops"] < da["tidset_es_word_ops"], (
         f"adaptive switching saved nothing on dense: word_ops "
         f"{da['es']['word_ops']} >= tidset {da['tidset_es_word_ops']}")
+    # ISSUE 7 acceptance: the pipelined run overlaps drain groups on the
+    # powerlaw regime (occupancy strictly above the serial baseline,
+    # which is 0.0 by construction) ...
+    pp = report["pipeline"]
+    assert (pp["pipelined"]["device_occupancy"]
+            > pp["serial"]["device_occupancy"]), (
+        f"pipelining overlapped nothing: occupancy "
+        f"{pp['pipelined']['device_occupancy']} <= serial "
+        f"{pp['serial']['device_occupancy']}")
+    # ... and per-bucket widths reduce device_calls at unchanged
+    # per-pair work (word_ops / comparisons / scatter_words).
+    at = report["autotune"]
+    for eng, work_key in (("bitmap", "word_ops"),
+                          ("prepost", "comparisons")):
+        calls, work = at[eng]["device_calls"], at[eng][work_key]
+        scat = at[eng]["scatter_words"]
+        assert calls["on"] < calls["off"], (
+            f"autotune reduced no {eng} device_calls: {calls}")
+        assert work["on"] == work["off"], (
+            f"autotune changed {eng} {work_key}: {work}")
+        assert scat["on"] == scat["off"], (
+            f"autotune changed {eng} scatter_words: {scat}")
     print(f"smoke ok -> {out_path}", file=sys.stderr)
     return report
 

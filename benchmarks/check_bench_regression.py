@@ -26,8 +26,16 @@ build (ROADMAP "CI trajectory" item).  Per smoke dataset:
   losing that gap means the representation switch stopped paying for
   itself.
 
-All metrics are deterministic functions of the engines (integer math
-over seeded synthetic datasets).  A legitimate engine change that
+The artifact's ``pipeline`` and ``autotune`` sections (ISSUE 7) and the
+per-run ``wall_s`` / ``assemble_s`` / ``resolve_s`` fields are
+*informational* and deliberately ignored here: they capture wall-clock
+and overlap behaviour, which varies with host load, so gating on them
+would make CI flaky.  Their acceptance checks (occupancy > serial,
+autotune cuts device_calls at equal work) run inside ``bench_paper.py``
+itself, where the comparison is within a single process on one host.
+
+All gated metrics are deterministic functions of the engines (integer
+math over seeded synthetic datasets).  A legitimate engine change that
 shifts them should update the committed baseline in the same PR:
 
     python benchmarks/bench_paper.py --smoke \

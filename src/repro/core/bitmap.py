@@ -60,6 +60,38 @@ NL_LEN_BUCKETS = (8, 32, 128, 512, 2048, 8192, 32768)
 PAIR_CHUNK_BUCKETS = (64, 256, 1024, 4096, 16384, 65536, 262144)
 NL_PAIR_CHUNK_BUCKETS = (64, 256, 1024, 4096, 8192, 32768)
 
+# Chunk-width autotuning (ISSUE 7): ``pair_chunk`` is calibrated at a
+# *reference* per-pair operand size; smaller operands can dispatch in
+# proportionally wider chunks at the same VMEM footprint.  These are
+# the reference sizes the knob is understood to be tuned at — a bitmap
+# pair moving ~1024 words (8 blocks x 128 words, the smoke shape), an
+# N-list pair whose longest operand sits in the 128-length bucket
+# (3 code words per PPC node).
+BITMAP_REF_ROW_WORDS = 1024
+NL_REF_LEN = 128
+
+
+def chunk_width_for(words_per_pair: int, base_chunk: int,
+                    bucket_table: Sequence[int], ref_words: int) -> int:
+    """Per-bucket pair-chunk width at equal VMEM footprint.
+
+    Returns the largest bucket ``w`` in ``bucket_table`` with
+    ``w * words_per_pair <= base_chunk * ref_words`` — i.e. the widest
+    bucketed chunk whose operand traffic stays within the budget the
+    caller's ``base_chunk`` knob implies at the reference operand size.
+    The result is floored at ``base_chunk`` (snapped into the table):
+    autotuning only *widens* small-operand chunks, so ``device_calls``
+    can never increase relative to the un-autotuned engine, and only
+    bucketed widths reach the jit cache (one (width, op) variant per
+    table entry, bounded)."""
+    budget = max(1, int(base_chunk)) * max(1, int(ref_words))
+    width = 0
+    for b in bucket_table:
+        if b * max(1, int(words_per_pair)) <= budget:
+            width = b
+    floor = min(int(base_chunk), bucket_table[-1])
+    return max(width, floor)
+
 
 def nl_pad_len(n: int) -> int:
     """Smallest N-list bucket >= ``n`` (power-of-two fallback past the

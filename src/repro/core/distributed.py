@@ -214,13 +214,16 @@ class DistributedMiner(BitmapMiner):
                  block_words: int = DEFAULT_BLOCK_WORDS,
                  compact_occupancy: float = 0.25,
                  diff_density: "float | None" = None,
-                 diff_hysteresis: float = 0.05):
+                 diff_hysteresis: float = 0.05, inflight: int = 2,
+                 autotune_chunk: bool = False):
         super().__init__(scheme=scheme, early_stop=early_stop,
                          block_words=block_words, pair_chunk=pair_chunk,
                          backend="jnp",
                          compact_occupancy=compact_occupancy,
                          diff_density=diff_density,
-                         diff_hysteresis=diff_hysteresis)
+                         diff_hysteresis=diff_hysteresis,
+                         inflight=inflight,
+                         autotune_chunk=autotune_chunk)
         del pair_axis
         self.mesh = mesh
         self.tid_axes = tuple(tid_axes) if tid_axes else tuple(mesh.axis_names)
@@ -245,10 +248,11 @@ class DistributedMiner(BitmapMiner):
                          bdb.n_items + min(self.pair_chunk, 4096)),
             mesh=self.mesh, tid_axes=self.tid_axes)
 
-    def _dispatch(self, store: DeviceRowStore, ua: np.ndarray,
-                  vb: np.ndarray, slots: np.ndarray, rho: np.ndarray,
-                  mode: str, stats: DeviceMiningStats,
-                  ) -> Tuple[np.ndarray, np.ndarray]:
+    def _dispatch_launch(self, store: DeviceRowStore, ua: np.ndarray,
+                         vb: np.ndarray, slots: np.ndarray,
+                         rho: np.ndarray, mode: str) -> Tuple:
+        """Launch the fused shard_map dispatch; NO host sync (the
+        blocking readbacks live in ``_dispatch_resolve``, ISSUE 7)."""
         # "and" -> tidset intersect program, "diff" -> diffset
         # difference program (ISSUE 6: declat/adaptive schemes route
         # their diff chunks here; both programs were built in __init__).
@@ -262,7 +266,14 @@ class DistributedMiner(BitmapMiner):
             _bucket_pad(slots, n, fill=cap),   # OOB pad -> dropped
             _bucket_pad(rho, n), np.int32(self._minsup),
             np.int32(self._n_blocks))   # real (unpadded) block count
-        stats.device_calls += 1
+        self._stats.device_calls += 1
+        return bound, count, blocks, scan_alive
+
+    def _dispatch_resolve(self, raw: Tuple, n: int,
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Blocking readback of one sharded dispatch + attribution."""
+        stats = self._stats
+        bound, count, blocks, scan_alive = raw
         bound = np.asarray(bound[:n])
         count = np.asarray(count[:n])
         blocks = np.asarray(blocks[:n])

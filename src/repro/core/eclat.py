@@ -78,8 +78,9 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.bitmap import (BitmapDB, DEFAULT_BLOCK_WORDS,
-                               PAIR_CHUNK_BUCKETS, bucket_pad)
+from repro.core.bitmap import (BITMAP_REF_ROW_WORDS, BitmapDB,
+                               DEFAULT_BLOCK_WORDS, PAIR_CHUNK_BUCKETS,
+                               bucket_pad, chunk_width_for)
 from repro.core.frontier import (Child, ClassNode, EngineAccounting,
                                  FrontierScheduler)
 from repro.core.rowstore import DeviceRowStore
@@ -158,6 +159,62 @@ def _bucket_pad(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
     return bucket_pad(arr, n, _PAIR_BUCKETS, fill)
 
 
+class PendingPairResult:
+    """Lazy result handle for one bitmap ``evaluate_pairs`` dispatch
+    (ISSUE 7 pipeline).
+
+    The fused dispatches were already launched (JAX async dispatch —
+    the device is busy); what is deferred here is every *blocking*
+    ``np.asarray`` readback of count/blocks/alive plus the stats
+    attribution and dead-slot frees that depend on them.  The scheduler
+    calls ``resolve()`` exactly once when the owning drain group
+    retires; if a slab compaction lands while the group is in flight it
+    calls ``remap(mapping)`` so the child slot ids this handle will
+    report stay valid (the dispatches themselves are unaffected — their
+    operands travel by value through the donation chain)."""
+
+    __slots__ = ("_miner", "_n", "_slots", "_segments")
+
+    def __init__(self, miner: "BitmapMiner", n: int, slots: np.ndarray,
+                 segments: List[Tuple[np.ndarray, str, np.ndarray, Any]]):
+        self._miner = miner
+        self._n = n
+        self._slots = slots
+        self._segments = segments
+
+    def remap(self, mapping: np.ndarray) -> None:
+        self._slots = mapping[self._slots]
+
+    def resolve(self) -> List[Tuple[int, int, int, Any]]:
+        miner = self._miner
+        stats, store = miner._stats, miner._store
+        n, slots = self._n, self._slots
+        support = np.zeros(n, np.int64)
+        freq = np.zeros(n, bool)
+        for sel, mode, rho_sel, raw in self._segments:
+            cnt, alive = miner._dispatch_resolve(raw, int(sel.size))
+            sup = cnt if mode == "and" else rho_sel - cnt
+            support[sel] = sup
+            # Dead pairs carry frozen (partial) counts; in diff mode a
+            # frozen count *overestimates* the support (rho - cnt), so
+            # aliveness is load-bearing.  This mask is exactly the
+            # dispatch's in-kernel scatter gate (ref._survivor_mask):
+            # only these children were materialised.
+            freq[sel] = np.logical_and(sup >= miner._minsup, alive)
+
+        kept_idx = np.nonzero(freq)[0]
+        stats.child_scatters += int(kept_idx.size)
+        # Real (unpadded) blocks, like word_ops/word_ops_full: the
+        # telemetry stays shard-count invariant even though a sharded
+        # store physically pads each child row's block axis with zeros.
+        stats.scatter_words += (int(kept_idx.size) * miner._n_blocks
+                                * miner.block_words)
+        store.free(slots[~freq])                  # dead children: recycle
+        self._segments = []                       # drop device refs
+        return [(int(ki), int(slots[ki]), int(support[ki]), None)
+                for ki in kept_idx]
+
+
 class BitmapMiner:
     """Eclat / dEclat / density-adaptive mining over a device-resident
     row store with fused screen+intersect(+difference) early stopping.
@@ -182,7 +239,8 @@ class BitmapMiner:
                  pair_chunk: int = 65536, backend: str = "auto",
                  metrics: bool = True, compact_occupancy: float = 0.25,
                  diff_density: "float | None" = None,
-                 diff_hysteresis: float = 0.05):
+                 diff_hysteresis: float = 0.05, inflight: int = 2,
+                 autotune_chunk: bool = False):
         if scheme not in ("eclat", "declat", "adaptive"):
             raise ValueError(f"bad scheme {scheme!r}")
         if scheme == "adaptive":
@@ -205,6 +263,13 @@ class BitmapMiner:
         # what makes the choice stable across consecutive drain groups).
         self.diff_density = diff_density
         self.diff_hysteresis = diff_hysteresis
+        # Dispatch-pipeline knobs (ISSUE 7): ``inflight`` is the ring
+        # depth (2 = double-buffered; 1 reproduces the serial engine's
+        # accounting bit-for-bit); ``autotune_chunk`` derives the chunk
+        # width from the row size (small-operand runs dispatch wider at
+        # equal VMEM footprint — see core.bitmap.chunk_width_for).
+        self.inflight = max(1, int(inflight))
+        self.autotune_chunk = bool(autotune_chunk)
         # The fused dispatch returns exact blocks_done/word_ops for free;
         # ``metrics`` is kept for API compatibility and no longer selects
         # a separate (two-dispatch) fast path.
@@ -244,8 +309,19 @@ class BitmapMiner:
         self._store = store
         self._out = out
         self._stats = stats
-        FrontierScheduler(self, self.pair_chunk).run(root)
+        # Autotuned chunk width: every bitmap pair in a run moves the
+        # same per-pair word mass, so the width is one run-wide value
+        # (the N-list engine's is per length bucket).
+        self._chunk_width = (chunk_width_for(
+            bdb.n_blocks * self.block_words, self.pair_chunk,
+            _PAIR_BUCKETS, BITMAP_REF_ROW_WORDS)
+            if self.autotune_chunk else None)
+        sched = FrontierScheduler(self, self.pair_chunk,
+                                  inflight=self.inflight,
+                                  drain_target=self._chunk_width)
+        sched.run(root)
         stats.note_allocator(store)
+        stats.note_scheduler(sched)
         stats.runtime_s = time.perf_counter() - t0
         return out, stats
 
@@ -314,14 +390,25 @@ class BitmapMiner:
             return op
         return None                        # homogeneous: keep order
 
+    def chunk_widths(self, cols: Dict[str, np.ndarray],
+                     ) -> "np.ndarray | None":
+        """Per-pair chunk-width cap (ISSUE 7): uniform for the bitmap
+        engine — every pair moves ``n_blocks * block_words`` operand
+        words, so the equal-VMEM width is one run-wide bucket."""
+        if self._chunk_width is None:
+            return None
+        return np.full(cols["ua"].size, self._chunk_width, np.int64)
+
     def evaluate_pairs(self, cols: Dict[str, np.ndarray],
-                       ) -> List[Tuple[int, int, int, Any]]:
+                       ) -> PendingPairResult:
         """One pair-chunk slice -> ONE fused device dispatch per
         representation present (exactly one for mode-homogeneous
         chunks — the common case, see ``chunk_sort_key``).
 
-        Returns the frequent children as ``(ki, slot, support, None)``
-        tuples (``ki`` = chunk-local pair index)."""
+        Returns a :class:`PendingPairResult` whose ``resolve()`` yields
+        the frequent children as ``(ki, slot, support, None)`` tuples
+        (``ki`` = chunk-local pair index).  The dispatches launch here
+        (async); the readbacks happen at resolve."""
         store, stats = self._store, self._stats
         ua, vb, rho, op = cols["ua"], cols["vb"], cols["rho"], cols["op"]
         n = int(ua.size)
@@ -333,33 +420,15 @@ class BitmapMiner:
         stats.word_ops_full += n * self._n_blocks * self.block_words
 
         slots = store.alloc(n)
-        support = np.zeros(n, np.int64)
-        freq = np.zeros(n, bool)
+        segments = []
         for op_code, mode in ((_OP_AND, "and"), (_OP_DIFF, "diff")):
             sel = np.nonzero(op == op_code)[0]
             if sel.size == 0:
                 continue
-            cnt, alive = self._dispatch(store, ua[sel], vb[sel],
-                                        slots[sel], rho[sel], mode, stats)
-            sup = cnt if mode == "and" else rho[sel] - cnt
-            support[sel] = sup
-            # Dead pairs carry frozen (partial) counts; in diff mode a
-            # frozen count *overestimates* the support (rho - cnt), so
-            # aliveness is load-bearing.  This mask is exactly the
-            # dispatch's in-kernel scatter gate (ref._survivor_mask):
-            # only these children were materialised.
-            freq[sel] = np.logical_and(sup >= self._minsup, alive)
-
-        kept_idx = np.nonzero(freq)[0]
-        stats.child_scatters += int(kept_idx.size)
-        # Real (unpadded) blocks, like word_ops/word_ops_full: the
-        # telemetry stays shard-count invariant even though a sharded
-        # store physically pads each child row's block axis with zeros.
-        stats.scatter_words += (int(kept_idx.size) * self._n_blocks
-                                * self.block_words)
-        store.free(slots[~freq])                  # dead children: recycle
-        return [(int(ki), int(slots[ki]), int(support[ki]), None)
-                for ki in kept_idx]
+            raw = self._dispatch_launch(store, ua[sel], vb[sel],
+                                        slots[sel], rho[sel], mode)
+            segments.append((sel, mode, rho[sel].astype(np.int64), raw))
+        return PendingPairResult(self, n, slots, segments)
 
     def make_class(self, parent: ClassNode,
                    children: List[Child]) -> ClassNode:
@@ -390,18 +459,18 @@ class BitmapMiner:
         return self._store.compact_if_sparse(
             self.compact_occupancy, reserve=reserve, backend=self.backend)
 
-    def _dispatch(self, store: DeviceRowStore, ua: np.ndarray,
-                  vb: np.ndarray, slots: np.ndarray, rho: np.ndarray,
-                  mode: str, stats: DeviceMiningStats,
-                  ) -> Tuple[np.ndarray, np.ndarray]:
-        """One fused device dispatch; updates work/attribution stats.
+    def _dispatch_launch(self, store: DeviceRowStore, ua: np.ndarray,
+                         vb: np.ndarray, slots: np.ndarray,
+                         rho: np.ndarray, mode: str) -> Tuple:
+        """Launch one fused device dispatch and return its un-read
+        device outputs ``(cnt, blocks, alive)`` — NO host sync here;
+        JAX async dispatch returns immediately and the blocking
+        readbacks live in ``_dispatch_resolve`` (the retire path).
 
         ``mode`` is "and" (tidset intersect) or "diff" (dEclat
-        difference — ``ops.screen_and_diff``).  Returns ``(cnt, alive)``
-        trimmed to the chunk length, where ``cnt`` is the raw kernel
-        count (support for "and", diffset size for "diff") and
-        ``alive`` marks pairs that survived ES.  The distributed miner
-        overrides this with the shard_map dispatches."""
+        difference — ``ops.screen_and_diff``).  The distributed miner
+        overrides the launch/resolve pair with the shard_map
+        dispatches."""
         n = int(ua.size)
         cap = store.capacity
         # minsup is always the real threshold: the dispatch's
@@ -424,7 +493,18 @@ class BitmapMiner:
                     _bucket_pad(rho, n), jnp.int32(self._minsup),
                     mode=mode, early_stop=self.early_stop,
                     backend=self.backend)
-        stats.device_calls += 1
+        self._stats.device_calls += 1
+        return cnt, blocks, alive
+
+    def _dispatch_resolve(self, raw: Tuple, n: int,
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Blocking readback of one launched dispatch + work/attribution
+        stats (the retire path's deliberate host sync).  Returns
+        ``(cnt, alive)`` trimmed to the chunk length, where ``cnt`` is
+        the raw kernel count (support for "and", diffset size for
+        "diff") and ``alive`` marks pairs that survived ES."""
+        stats = self._stats
+        cnt, blocks, alive = raw
         cnt = np.asarray(cnt[:n])
         blocks = np.asarray(blocks[:n])
         alive = np.asarray(alive[:n])

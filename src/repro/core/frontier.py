@@ -1,4 +1,5 @@
-"""Engine-agnostic DFS frontier scheduler (ISSUE 4 tentpole).
+"""Engine-agnostic DFS frontier scheduler (ISSUE 4 tentpole, pipelined
+in ISSUE 7).
 
 The paper's early-stopping trick only pays off when support checks are
 issued in large device batches: deep in the DFS individual equivalence
@@ -22,6 +23,19 @@ spent operand rows go back to the allocator, and when the allocator is
 compacted (a drain-group boundary is the only point where every live
 row is reachable from the frontier, so handle remapping is sound).
 
+Dispatch pipeline (ISSUE 7): ``run()`` keeps an in-flight ring of up to
+``inflight`` dispatched-but-unretired drain groups.  While group N's
+fused dispatches execute on the device (JAX async dispatch returns
+immediately), the host drains, assembles and dispatches group N+1 —
+the blocking accounting readbacks are *deferred* into the lazy handle
+``evaluate_pairs`` returns and only materialise when the group retires
+from the ring.  Children are therefore pushed, classes released and
+itemsets emitted at *retire* time, preserving the serial DFS child
+order exactly; with ``inflight=1`` every handle is resolved immediately
+after its dispatch and the scheduler reproduces the serial engine's
+accounting bit-for-bit (chunk-level free-before-alloc slot reuse
+included).
+
 Client protocol (duck-typed; the miners implement it directly):
 
 ``pair_columns(klass, ia, ib) -> Dict[str, np.ndarray]``
@@ -29,10 +43,16 @@ Client protocol (duck-typed; the miners implement it directly):
     Clients that mix *representations* (tidset vs diffset classes,
     ISSUE 6) read ``klass.representation`` here to orient operands and
     emit a per-pair op column so mixed drain groups stay dispatchable.
-``evaluate_pairs(cols) -> Iterable[(ki, row, support, extra)]``
+``evaluate_pairs(cols) -> handle``
     ONE fused device dispatch for a <= pair_chunk column slice (one per
-    representation present in the slice, when a group mixes them);
-    yields the surviving children by chunk-local pair index.
+    representation present in the slice, when a group mixes them).
+    Returns a *lazy result handle*: an object with ``.resolve() ->
+    Iterable[(ki, row, support, extra)]`` (blocking readbacks + stats
+    attribution, called once at group retirement) and ``.remap(mapping)``
+    (rewrite any allocator handles the pending result still holds when
+    a compaction lands while the group is in flight).  A plain iterable
+    of ``(ki, row, support, extra)`` tuples is also accepted — the
+    scheduler treats it as an already-resolved handle.
 ``make_class(parent, children) -> ClassNode``
     Wrap surviving children of one (class, member) group as a new class.
     This is also where a representation flip is decided: the returned
@@ -43,23 +63,34 @@ Client protocol (duck-typed; the miners implement it directly):
 ``maybe_compact(reserve) -> Optional[np.ndarray]``
     Compact the allocator if occupancy warrants it; return an old->new
     row-id mapping when handles moved (``None`` when ids are stable).
-    ``reserve`` covers the WHOLE drain group about to run.
+    ``reserve`` covers the WHOLE drain group about to run PLUS every
+    group still in flight (their children allocate at retirement).
 ``chunk_sort_key(cols) -> Optional[np.ndarray]`` (optional)
     Per-pair sort key (e.g. operand length bucket): drained pairs are
     stably reordered by it before chunk slicing so chunks stay
     dispatch-width homogeneous (see ``_assemble``).
+``chunk_widths(cols) -> Optional[np.ndarray]`` (optional)
+    Per-pair chunk-width cap, evaluated on the *sorted* columns: pair i
+    may share a chunk with at most ``widths[i] - 1`` predecessors.
+    Engines derive it per length bucket (``core.bitmap.chunk_width_for``)
+    so small-operand chunks go wider at equal VMEM footprint while the
+    compile cache stays keyed on bucketed (width, op) pairs.  ``None``
+    (or an absent hook) falls back to the global ``pair_chunk`` knob.
 
 Work accounting for every engine flows through one shared struct
 (:class:`EngineAccounting`): ``device_calls``, ES deaths, allocator
-grows/compactions and peak live mass mean the same thing in every
-engine's stats dict and in ``benchmarks/bench_paper.py``.
+grows/compactions, peak live mass and the pipeline occupancy metrics
+mean the same thing in every engine's stats dict and in
+``benchmarks/bench_paper.py``.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
-from typing import (Any, Dict, Hashable, List, NamedTuple, Optional,
-                    Tuple)
+from time import perf_counter
+from typing import (Any, Deque, Dict, Hashable, List, NamedTuple,
+                    Optional, Tuple)
 
 import numpy as np
 
@@ -71,7 +102,15 @@ class EngineAccounting:
     ``peak_live`` is the allocator's peak live mass — bitmap rows for the
     row-store engines, PPC-code triples for the N-list engine.
     ``compaction_occupancy`` is ``live / capacity`` right after the most
-    recent compaction epoch (0.0 when compaction never fired)."""
+    recent compaction epoch (0.0 when compaction never fired).
+
+    Pipeline telemetry (ISSUE 7): ``inflight_groups`` is the ring depth
+    the run was configured with; ``device_occupancy`` is the fraction of
+    drain groups dispatched while an earlier group was still in flight
+    (deterministic — derived from ring state at dispatch, not from
+    timing — so it is exactly 0.0 for a serial ``inflight=1`` run);
+    ``assemble_s`` / ``resolve_s`` split host time between group
+    assembly+dispatch and blocking retire-time readbacks."""
 
     candidates: int = 0
     nodes: int = 0
@@ -89,6 +128,11 @@ class EngineAccounting:
     # (3 * child_len each).
     child_scatters: int = 0
     scatter_words: int = 0
+    # Dispatch-pipeline telemetry (ISSUE 7).
+    inflight_groups: int = 1
+    device_occupancy: float = 0.0
+    assemble_s: float = 0.0
+    resolve_s: float = 0.0
 
     @property
     def deaths(self) -> int:
@@ -103,6 +147,13 @@ class EngineAccounting:
         self.peak_live = alloc.peak_live
         self.compaction_occupancy = alloc.last_compaction_occupancy
 
+    def note_scheduler(self, sched: "FrontierScheduler") -> None:
+        """Pull the pipeline counters from the scheduler that ran."""
+        self.inflight_groups = sched.inflight
+        self.device_occupancy = sched.device_occupancy
+        self.assemble_s = sched.assemble_s
+        self.resolve_s = sched.resolve_s
+
     def accounting_dict(self) -> Dict[str, float]:
         return {
             "device_calls": self.device_calls,
@@ -111,6 +162,10 @@ class EngineAccounting:
             "compaction_occupancy": round(self.compaction_occupancy, 4),
             "child_scatters": self.child_scatters,
             "scatter_words": self.scatter_words,
+            "inflight_groups": self.inflight_groups,
+            "device_occupancy": round(self.device_occupancy, 4),
+            "assemble_s": round(self.assemble_s, 6),
+            "resolve_s": round(self.resolve_s, 6),
         }
 
 
@@ -146,28 +201,81 @@ class Child(NamedTuple):
     extra: Any
 
 
-class FrontierScheduler:
-    """Shared DFS work-stack with cross-class drain-group batching.
+class _InflightGroup:
+    """One dispatched-but-unretired drain group in the pipeline ring.
 
-    Classes are drained from the stack until one ``pair_chunk`` worth of
-    sibling pairs is collected, their pair triangles are concatenated
-    into global operand columns, and each ``pair_chunk`` slice goes to
-    the client as exactly one fused device dispatch.  Result sets are
+    ``parts`` holds ``(chunk_lo, handle_or_results)`` per chunk slice:
+    a lazy handle while readbacks are deferred, or an already-resolved
+    result list (``inflight=1``, or clients returning plain iterables).
+    """
+
+    __slots__ = ("drained", "meta", "parts", "total")
+
+    def __init__(self, drained: List[ClassNode],
+                 meta: List[Tuple[int, int, int]],
+                 parts: List[Tuple[int, Any]], total: int):
+        self.drained = drained
+        self.meta = meta
+        self.parts = parts
+        self.total = total
+
+
+class FrontierScheduler:
+    """Shared DFS work-stack with cross-class drain-group batching and a
+    double-buffered dispatch pipeline.
+
+    Classes are drained from the stack until one ``drain_target`` worth
+    of sibling pairs is collected, their pair triangles are concatenated
+    into global operand columns, and each chunk slice goes to the client
+    as exactly one fused device dispatch.  Result sets are
     order-independent, so draining order never affects correctness.
+
+    Pipelining: up to ``inflight`` groups sit in a FIFO ring between
+    dispatch and retirement.  Assembly of the next group overlaps device
+    execution of the previous ones; a group's blocking readbacks, child
+    pushes and operand releases all happen when it is popped from the
+    ring.  Group composition is taken from the stack *as of dispatch
+    time* — a pipelined run may therefore batch classes differently
+    than a serial one (``device_calls``/``grows`` may differ) while the
+    emitted itemsets, child order and all order-invariant work counters
+    (candidates, word_ops, comparisons, es_checks, ...) are identical.
 
     Row lifetime: a class's member rows are operands only for its own
     pair triangle, so they are released as soon as the drain group that
-    consumed them completes; child rows live until the child class is
+    consumed them retires; child rows live until the child class is
     drained in turn.  Compaction runs at drain-group boundaries, where
-    the stack plus the drained group is exactly the live row set — the
-    scheduler remaps every frontier handle through the mapping the
-    allocator returns.
+    the stack plus the drained group plus the in-flight ring is exactly
+    the live row set — the scheduler remaps every frontier handle,
+    including the pending handles of in-flight groups, through the
+    mapping the allocator returns (safe under JAX async dispatch: the
+    in-flight dispatches hold their operand *values* via the donation
+    data-dependency chain, only host-side slot ids move).
     """
 
-    def __init__(self, client, pair_chunk: int):
+    def __init__(self, client, pair_chunk: int, *, inflight: int = 1,
+                 drain_target: Optional[int] = None):
         self.client = client
         self.pair_chunk = int(pair_chunk)
+        self.inflight = max(1, int(inflight))
+        # Autotuned widths can exceed pair_chunk; drain enough pairs to
+        # fill the widest chunk the client may request.
+        self.drain_target = (int(drain_target) if drain_target
+                             else self.pair_chunk)
         self._stack: List[ClassNode] = []
+        self._ring: Deque[_InflightGroup] = deque()
+        # Pipeline telemetry: a group counts as "overlapped" iff an
+        # earlier group was still in flight at its dispatch.  Pure ring
+        # bookkeeping (no timing), so the metric is deterministic.
+        self.groups_dispatched = 0
+        self.groups_overlapped = 0
+        self.assemble_s = 0.0
+        self.resolve_s = 0.0
+
+    @property
+    def device_occupancy(self) -> float:
+        """Fraction of drain groups dispatched while the ring was
+        non-empty (exactly 0.0 for a serial ``inflight=1`` run)."""
+        return self.groups_overlapped / max(self.groups_dispatched, 1)
 
     # -- frontier bookkeeping ------------------------------------------------
 
@@ -175,11 +283,11 @@ class FrontierScheduler:
         self._stack.append(klass)
 
     def drain_group(self) -> Tuple[List[ClassNode], int]:
-        """Pop classes until one pair_chunk of pairs is filled.  Leaf
+        """Pop classes until one drain_target of pairs is filled.  Leaf
         classes (< 2 members) release their rows and contribute none."""
         drained: List[ClassNode] = []
         total = 0
-        while self._stack and total < self.pair_chunk:
+        while self._stack and total < self.drain_target:
             klass = self._stack.pop()
             m = len(klass.itemsets)
             if m < 2:
@@ -192,52 +300,135 @@ class FrontierScheduler:
     def remap(self, mapping: np.ndarray,
               drained: Optional[List[ClassNode]] = None) -> None:
         """Apply an allocator old->new row-id mapping to every live
-        frontier handle (stack + the in-flight drain group)."""
+        frontier handle: stack, the drain group being assembled, and
+        every in-flight group (class handles AND pending result
+        handles — a retired handle is never remapped because retirement
+        pops the group from the ring before the next compaction point).
+        """
         for klass in self._stack:
             klass.rows = mapping[klass.rows]
         for klass in drained or ():
             klass.rows = mapping[klass.rows]
+        for group in self._ring:
+            for klass in group.drained:
+                klass.rows = mapping[klass.rows]
+            for _lo, part in group.parts:
+                remap_fn = getattr(part, "remap", None)
+                if remap_fn is not None:
+                    remap_fn(mapping)
 
     # -- main loop -----------------------------------------------------------
 
     def run(self, root: ClassNode) -> None:
         self.push(root)
-        while self._stack:
-            drained, total = self.drain_group()
-            if not drained:
-                continue
-            # Compaction reserve must cover the WHOLE drain group, not
-            # one pair_chunk: a group's chunks allocate children
-            # cumulatively (earlier chunks' survivors stay live while
-            # later chunks allocate), so reserving ``min(total,
-            # pair_chunk)`` let a compaction shrink to a size the same
-            # group immediately regrew (compact -> grow thrash).
-            mapping = self.client.maybe_compact(total)
-            if mapping is not None:
-                self.remap(mapping, drained)
+        ring = self._ring
+        while self._stack or ring:
+            # Fill the pipeline: dispatch groups until the ring is full
+            # or the stack is dry.  Children only appear at retirement,
+            # so every group in one fill round batches pre-existing
+            # frontier classes.
+            while self._stack and len(ring) < self.inflight:
+                drained, total = self.drain_group()
+                if not drained:
+                    continue
+                # Compaction reserve must cover the WHOLE drain group
+                # plus every in-flight group, not one pair_chunk: a
+                # group's chunks allocate children cumulatively (earlier
+                # chunks' survivors stay live while later chunks
+                # allocate), and in-flight groups allocate at
+                # retirement, so a smaller reserve let a compaction
+                # shrink to a size the pipeline immediately regrew
+                # (compact -> grow thrash).
+                pending = sum(g.total for g in ring)
+                mapping = self.client.maybe_compact(total + pending)
+                if mapping is not None:
+                    self.remap(mapping, drained)
 
-            cols, meta = self._assemble(drained)
-            groups: Dict[Tuple[int, int], List[Tuple[int, Child]]] = {}
-            for lo in range(0, total, self.pair_chunk):
-                sl = slice(lo, lo + self.pair_chunk)
-                chunk = {k: v[sl] for k, v in cols.items()}
-                for ki, row, support, extra in self.client.evaluate_pairs(
-                        chunk):
-                    ci, a, b = meta[lo + ki]
-                    klass = drained[ci]
-                    itemset = klass.itemsets[a] + (klass.itemsets[b][-1],)
-                    self.client.emit(itemset, support)
-                    groups.setdefault((ci, a), []).append(
-                        (b, Child(itemset, row, support, extra)))
-            # Child classes are rebuilt in canonical sibling order (b
-            # ascending), NOT evaluation order: chunk_sort_key may have
-            # permuted the pairs, and class member order is load-bearing
-            # (pair orientation / search order within the class).
-            for ci, _a in sorted(groups):
-                kids = [c for _b, c in sorted(groups[(ci, _a)])]
-                self.push(self.client.make_class(drained[ci], kids))
-            for klass in drained:
-                self.client.release(klass)
+                t0 = perf_counter()
+                r0 = self.resolve_s
+                cols, meta = self._assemble(drained)
+                widths = None
+                widths_fn = getattr(self.client, "chunk_widths", None)
+                if widths_fn is not None:
+                    widths = widths_fn(cols)
+                parts: List[Tuple[int, Any]] = []
+                for lo, sl in self._chunk_slices(total, widths):
+                    chunk = {k: v[sl] for k, v in cols.items()}
+                    handle = self.client.evaluate_pairs(chunk)
+                    if self.inflight == 1:
+                        # Serial mode resolves chunk-by-chunk so dead
+                        # slots are freed before the next chunk
+                        # allocates — bit-for-bit the pre-pipeline
+                        # accounting (slot reuse order included).
+                        handle = self._resolve(handle)
+                    parts.append((lo, handle))
+                # Assembly time excludes any resolve time accrued inside
+                # the loop (inflight=1 resolves inline).
+                self.assemble_s += ((perf_counter() - t0)
+                                    - (self.resolve_s - r0))
+                if ring:
+                    self.groups_overlapped += 1
+                self.groups_dispatched += 1
+                ring.append(_InflightGroup(drained, meta, parts, total))
+            if ring:
+                self._retire(ring.popleft())
+
+    def _resolve(self, handle) -> List[Tuple[int, int, int, Any]]:
+        """Materialise one chunk's deferred result (blocking readbacks
+        + stats attribution happen inside the client handle)."""
+        t0 = perf_counter()
+        if hasattr(handle, "resolve"):
+            out = list(handle.resolve())
+        else:
+            out = list(handle)
+        self.resolve_s += perf_counter() - t0
+        return out
+
+    def _retire(self, group: _InflightGroup) -> None:
+        """Pop one group from the ring: resolve its deferred handles,
+        emit survivors, push child classes in canonical order, release
+        the consumed operand rows."""
+        drained, meta = group.drained, group.meta
+        groups: Dict[Tuple[int, int], List[Tuple[int, Child]]] = {}
+        for lo, part in group.parts:
+            results = part if isinstance(part, list) else self._resolve(part)
+            for ki, row, support, extra in results:
+                ci, a, b = meta[lo + ki]
+                klass = drained[ci]
+                itemset = klass.itemsets[a] + (klass.itemsets[b][-1],)
+                self.client.emit(itemset, support)
+                groups.setdefault((ci, a), []).append(
+                    (b, Child(itemset, row, support, extra)))
+        # Child classes are rebuilt in canonical sibling order (b
+        # ascending), NOT evaluation order: chunk_sort_key may have
+        # permuted the pairs, and class member order is load-bearing
+        # (pair orientation / search order within the class).
+        for ci, _a in sorted(groups):
+            kids = [c for _b, c in sorted(groups[(ci, _a)])]
+            self.push(self.client.make_class(drained[ci], kids))
+        for klass in drained:
+            self.client.release(klass)
+
+    def _chunk_slices(self, total: int,
+                      widths: Optional[np.ndarray],
+                      ) -> List[Tuple[int, slice]]:
+        """Cut [0, total) into dispatch chunks.  Without widths: fixed
+        ``pair_chunk`` strides.  With per-pair width caps (already in
+        sorted-column order, non-increasing after the length sort): grow
+        each chunk greedily while it stays within the width cap of every
+        member — chunk size <= min(widths in chunk) by construction."""
+        slices: List[Tuple[int, slice]] = []
+        lo = 0
+        while lo < total:
+            if widths is None:
+                end = min(lo + self.pair_chunk, total)
+            else:
+                end = lo + 1
+                while end < total and (end - lo) < int(widths[end]):
+                    end += 1
+            slices.append((lo, slice(lo, end)))
+            lo = end
+        return slices
 
     def _assemble(self, drained: List[ClassNode],
                   ) -> Tuple[Dict[str, np.ndarray],

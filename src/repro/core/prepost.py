@@ -52,7 +52,8 @@ from repro.core.oracle import PPCTree, MiningStats
 from repro.core.frontier import (Child, ClassNode, EngineAccounting,
                                  FrontierScheduler)
 from repro.core.rowstore import NListPool
-from repro.core.bitmap import (NL_PAIR_CHUNK_BUCKETS, bucket_pad,
+from repro.core.bitmap import (NL_LEN_BUCKETS, NL_PAIR_CHUNK_BUCKETS,
+                               NL_REF_LEN, bucket_pad, chunk_width_for,
                                nl_pad_len, nl_pad_len_np)
 from repro.kernels import ops
 
@@ -67,6 +68,93 @@ def _pad_len(n: int) -> int:
     """Bucketed N-list gather width (power-of-two fallback past the
     largest tuned bucket — huge N-lists must not be a hard error)."""
     return nl_pad_len(n)
+
+
+class PendingMergeResult:
+    """Lazy result handle for one N-list ``evaluate_pairs`` chunk
+    (ISSUE 7 pipeline): the merge pre-pass has been *launched*; the
+    blocking readbacks of child_len/support/cmps/checks/alive, the
+    tight survivor extent allocation AND the scatter dispatch are all
+    deferred to ``resolve()`` at group retirement.
+
+    Deferring the scatter past other groups' dispatches is sound
+    because ``ops.nlist_scatter`` re-gathers its operand windows from
+    the *current* slab by offset and the device match table
+    (``out_slot``) is window-relative: this group's operand extents are
+    live until its own retirement, other groups only scatter into
+    freshly allocated extents, and pool growth preserves offsets.  A
+    compaction landing while the group is in flight DOES move extents —
+    pool row ids are stable (``remap`` is a no-op) but offsets are not,
+    so ``resolve()`` re-resolves every offset through the pool's host
+    tables at scatter time instead of caching dispatch-time values."""
+
+    __slots__ = ("_miner", "_n", "_u_row", "_v_row", "_u_len", "_v_len",
+                 "_lu", "_lv", "_raw")
+
+    def __init__(self, miner: "DevicePrePost", n: int,
+                 u_row: np.ndarray, v_row: np.ndarray,
+                 u_len: np.ndarray, v_len: np.ndarray,
+                 lu: int, lv: int, raw: Tuple):
+        self._miner = miner
+        self._n = n
+        self._u_row, self._v_row = u_row, v_row
+        self._u_len, self._v_len = u_len, v_len
+        self._lu, self._lv = lu, lv
+        self._raw = raw
+
+    def remap(self, mapping) -> None:
+        """Pool row ids are compaction-stable; nothing to rewrite."""
+
+    def resolve(self) -> List[Tuple[int, int, int, Any]]:
+        miner = self._miner
+        pool, stats = miner._pool, miner._stats
+        n = self._n
+        out_slot, child_len, support, cmps, checks, alive = self._raw
+        child_len = np.asarray(child_len[:n])
+        support = np.asarray(support[:n])
+        alive = np.asarray(alive[:n])
+        stats.comparisons += int(np.asarray(cmps[:n]).sum())
+        if miner.early_stop:
+            # One ES bound evaluation per skipped V code — exactly the
+            # oracle's es_checks, and aborts are only attributed when
+            # the guard was actually armed (the non-ES merge must
+            # report zero deaths).
+            stats.es_checks += int(np.asarray(checks[:n]).sum())
+            stats.es_aborts += int((~alive).sum())
+
+        freq = support >= miner._minsup  # aborted pairs report support 0
+        kept = np.nonzero(freq)[0]
+        if kept.size == 0:
+            return []
+
+        # HOST-SYNC (load-bearing): the tight survivor-extent
+        # allocation is *data-dependent* — extent sizes are the
+        # pre-pass's exact child lengths, so the host must block on the
+        # ``child_len`` readback above before it can size ``alloc_rows``
+        # (and grow the pool) for the scatter below.  This is why the
+        # presize->scatter pair cannot be fused into one launch and why
+        # the scatter rides the retire path.
+        child_rows = pool.alloc_rows(child_len[kept])
+        out_off = np.full(n, pool.capacity, np.int32)   # default: dropped
+        out_off[kept] = pool.offsets(child_rows)
+        # Offsets re-resolved at scatter time (NOT dispatch time): an
+        # in-flight compaction may have moved every live extent.
+        u_off = pool.offsets(self._u_row)
+        v_off = pool.offsets(self._v_row)
+
+        def pad(arr, fill=0):
+            return bucket_pad(arr, n, _PAIR_BUCKETS, fill)
+        pool.codes, _ = ops.nlist_scatter(
+            pool.codes, out_slot, pad(u_off), pad(self._u_len),
+            pad(v_off), pad(self._v_len),
+            pad(out_off, fill=pool.capacity),
+            lu=self._lu, lv=self._lv, backend=miner.backend)
+        stats.device_calls += 1
+        stats.child_scatters += int(kept.size)
+        stats.scatter_words += 3 * int(child_len[kept].sum())
+        self._raw = None                             # drop device refs
+        return [(int(b), int(row), int(support[b]), int(child_len[b]))
+                for b, row in zip(kept, child_rows, strict=True)]
 
 
 @dataclass
@@ -111,11 +199,18 @@ class DevicePrePost:
     """
 
     def __init__(self, early_stop: bool = True, pair_chunk: int = 8192,
-                 backend: str = "auto", compact_occupancy: float = 0.25):
+                 backend: str = "auto", compact_occupancy: float = 0.25,
+                 inflight: int = 2, autotune_chunk: bool = False):
         self.early_stop = early_stop
         self.pair_chunk = min(pair_chunk, _PAIR_BUCKETS[-1])
         self.backend = backend
         self.compact_occupancy = compact_occupancy
+        # Dispatch-pipeline knobs (ISSUE 7): ring depth and per-bucket
+        # chunk-width autotuning (short-operand chunks dispatch wider at
+        # equal VMEM footprint; see core.bitmap.chunk_width_for).
+        self.inflight = max(1, int(inflight))
+        self.autotune_chunk = bool(autotune_chunk)
+        self._widths: Dict[int, int] = {}
 
     def mine(self, db: Sequence[Sequence[Hashable]], minsup: int,
              ) -> Tuple[ItemsetSupports, DevicePrePostStats]:
@@ -149,8 +244,16 @@ class DevicePrePost:
         self._pool = pool
         self._out = out
         self._stats = stats
-        FrontierScheduler(self, self.pair_chunk).run(root)
+        # The widest autotuned chunk is the smallest bucket's width;
+        # draining that many pairs keeps wide chunks full.
+        drain_target = (self._width_for_bucket(NL_LEN_BUCKETS[0])
+                        if self.autotune_chunk else None)
+        sched = FrontierScheduler(self, self.pair_chunk,
+                                  inflight=self.inflight,
+                                  drain_target=drain_target)
+        sched.run(root)
         stats.note_allocator(pool)
+        stats.note_scheduler(sched)
         stats.runtime_s = time.perf_counter() - t0
         return out, stats
 
@@ -172,8 +275,34 @@ class DevicePrePost:
         ``lu``/``lv`` gather only for its own (homogeneous) chunk."""
         return nl_pad_len_np(np.maximum(cols["u_len"], cols["v_len"]))
 
+    def _width_for_bucket(self, bucket: int) -> int:
+        """Autotuned chunk width for one operand length bucket: a pair
+        whose longest operand sits in bucket ``b`` moves ~3*b code
+        words, so short-operand chunks widen proportionally (floored at
+        ``pair_chunk`` — autotuning never narrows a chunk)."""
+        w = self._widths.get(bucket)
+        if w is None:
+            w = chunk_width_for(3 * bucket, self.pair_chunk,
+                                _PAIR_BUCKETS, 3 * NL_REF_LEN)
+            self._widths[bucket] = w
+        return w
+
+    def chunk_widths(self, cols: Dict[str, np.ndarray],
+                     ) -> "np.ndarray | None":
+        """Per-pair chunk-width cap (ISSUE 7), evaluated on the sorted
+        columns: pairs are already ordered by length bucket
+        (``chunk_sort_key``), so the caps are non-increasing and the
+        scheduler's greedy slicer packs each bucket at its own width."""
+        if not self.autotune_chunk:
+            return None
+        buckets = nl_pad_len_np(np.maximum(cols["u_len"], cols["v_len"]))
+        widths = np.empty(buckets.size, np.int64)
+        for b in np.unique(buckets):
+            widths[buckets == b] = self._width_for_bucket(int(b))
+        return widths
+
     def evaluate_pairs(self, cols: Dict[str, np.ndarray],
-                       ) -> List[Tuple[int, int, int, Any]]:
+                       ) -> PendingMergeResult:
         """One pair-chunk slice -> merge pre-pass + survivor-only
         scatter (ISSUE 5: two dispatches instead of one, pessimistic
         extents for none).
@@ -188,10 +317,15 @@ class DevicePrePost:
         device-resident match table into those tight extents.  A chunk
         with no survivors skips the scatter dispatch entirely.
 
-        Returns the frequent children as ``(ki, row, support, length)``
-        tuples.  Operand U/V extents vary per pair (cross-class chunk):
-        the gather widths are the buckets of the chunk maxima, kept
-        homogeneous by :meth:`chunk_sort_key`."""
+        Pipelined (ISSUE 7): only the pre-pass *launches* here.  The
+        readbacks, the tight allocation (which must block on the exact
+        child lengths) and the scatter dispatch live in the returned
+        :class:`PendingMergeResult` and run at group retirement, whose
+        ``resolve()`` yields the frequent children as
+        ``(ki, row, support, length)`` tuples.  Operand U/V extents
+        vary per pair (cross-class chunk): the gather widths are the
+        buckets of the chunk maxima, kept homogeneous by
+        :meth:`chunk_sort_key`."""
         pool, stats = self._pool, self._stats
         u_len, v_len = cols["u_len"], cols["v_len"]
         n = int(u_len.size)
@@ -203,45 +337,14 @@ class DevicePrePost:
 
         def pad(arr, fill=0):
             return bucket_pad(arr, n, _PAIR_BUCKETS, fill)
-        out_slot, child_len, support, cmps, checks, alive = \
-            ops.nlist_presize(
-                pool.codes, pad(u_off), pad(u_len), pad(v_off), pad(v_len),
-                pad(cols["rho_v"]), np.int32(self._minsup),
-                lu=lu, lv=lv, early_stop=self.early_stop,
-                backend=self.backend)
+        raw = ops.nlist_presize(
+            pool.codes, pad(u_off), pad(u_len), pad(v_off), pad(v_len),
+            pad(cols["rho_v"]), np.int32(self._minsup),
+            lu=lu, lv=lv, early_stop=self.early_stop,
+            backend=self.backend)
         stats.device_calls += 1
-        child_len = np.asarray(child_len[:n])
-        support = np.asarray(support[:n])
-        alive = np.asarray(alive[:n])
-        stats.comparisons += int(np.asarray(cmps[:n]).sum())
-        if self.early_stop:
-            # One ES bound evaluation per skipped V code — exactly the
-            # oracle's es_checks, and aborts are only attributed when
-            # the guard was actually armed (the non-ES merge must
-            # report zero deaths).
-            stats.es_checks += int(np.asarray(checks[:n]).sum())
-            stats.es_aborts += int((~alive).sum())
-
-        freq = support >= self._minsup   # aborted pairs report support 0
-        kept = np.nonzero(freq)[0]
-        if kept.size == 0:
-            return []
-
-        # Tight, survivor-only child extents (allocation may grow the
-        # slab, so offsets are resolved after it; live extents and the
-        # pre-pass offsets above are stable across growth).
-        child_rows = pool.alloc_rows(child_len[kept])
-        out_off = np.full(n, pool.capacity, np.int32)   # default: dropped
-        out_off[kept] = pool.offsets(child_rows)
-        pool.codes, _ = ops.nlist_scatter(
-            pool.codes, out_slot, pad(u_off), pad(u_len), pad(v_off),
-            pad(v_len), pad(out_off, fill=pool.capacity),
-            lu=lu, lv=lv, backend=self.backend)
-        stats.device_calls += 1
-        stats.child_scatters += int(kept.size)
-        stats.scatter_words += 3 * int(child_len[kept].sum())
-        return [(int(b), int(row), int(support[b]), int(child_len[b]))
-                for b, row in zip(kept, child_rows, strict=True)]
+        return PendingMergeResult(self, n, cols["u_row"], cols["v_row"],
+                                  u_len, v_len, lu, lv, raw)
 
     def make_class(self, parent: ClassNode,
                    children: List[Child]) -> ClassNode:

@@ -217,6 +217,16 @@ class DeviceRowStore:
 
         Returns the old->new slot mapping ``int32[old_capacity]`` (-1 for
         slots that were free): callers MUST remap every live handle.
+
+        HOST-SYNC (load-bearing, ISSUE 7 audit): the mapping is derived
+        from the *host* free list (no device readback), but it must be
+        applied to every frontier handle — stack, drain group AND
+        in-flight pipeline handles — before the next group's columns
+        are assembled, so compaction is a hard host-serialization point
+        that cannot ride the pipeline ring.  Only the bookkeeping
+        blocks: the ``ops.compact_rows`` gather itself is async and
+        overlaps in-flight dispatches safely (they hold their operand
+        values through the donation data-dependency chain).
         """
         from repro.kernels import ops
 
@@ -342,7 +352,16 @@ class NListPool:
 
     def alloc_rows(self, lengths: Sequence[int]) -> np.ndarray:
         """One row per requested length (its max capacity); returns int32
-        row ids.  Actual lengths are refined later via set_length."""
+        row ids.  Actual lengths are refined later via set_length.
+
+        HOST-SYNC (load-bearing, ISSUE 7 audit): on the mining hot path
+        ``lengths`` are the presize pass's exact child lengths, so the
+        caller must have blocked on that readback before this runs —
+        extent placement (and any ``_grow``) is host bookkeeping that
+        cannot be sized without the data.  This is why the N-list
+        engine's scatter is a retire-time action, not a dispatch-time
+        one (see ``core.prepost.PendingMergeResult``); the ``_grow``
+        device concat itself stays async."""
         rows = np.empty(len(lengths), np.int32)
         for k, ln in enumerate(lengths):
             ln = int(ln)

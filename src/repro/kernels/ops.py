@@ -13,6 +13,30 @@ bucketed sizes (core/eclat.py::_bucket_pad) so jit caches stay small.
 ``screen_and_intersect`` is the mining hot path: one dispatch per pair
 chunk against the device-resident row store, operand gather and child
 row/suffix scatter included.
+
+Compile-cache discipline (ISSUE 7, chunk-width autotuning): the jit
+cache under every wrapper is keyed on input *shapes* plus the static
+args — for the bitmap family effectively ``(padded pair width, mode,
+early_stop, backend)``, for the N-list family ``(padded pair width,
+lu, lv, early_stop, backend)``.  The engines keep the variant count
+bounded by quantizing BOTH axes through ``core.bitmap``:  pair widths
+through ``bucket_pad`` over ``PAIR_CHUNK_BUCKETS`` /
+``NL_PAIR_CHUNK_BUCKETS`` and gather widths through ``nl_pad_len``
+over ``NL_LEN_BUCKETS``.  Per-bucket autotuned chunk widths
+(``chunk_width_for``) stay inside the same tables — autotuning changes
+which bucket a chunk lands in, never introduces new shapes — so the
+cache holds at most one entry per (width-bucket, op) pair regardless
+of the width policy.  (Not asserted here: tests and the roofline
+harness call these wrappers directly with arbitrary widths; the
+discipline is the engines' contract, enforced by their use of
+``bucket_pad``.)
+
+Donation & pipelining (ISSUE 7): ``screen_and_intersect`` /
+``screen_and_diff`` donate the rows/suffix slabs and ``nlist_scatter``
+donates the codes slab.  The engines may keep several dispatches in
+flight (the frontier scheduler's ring) — this is safe because each
+dispatch consumes its operands *by value* at enqueue time and PJRT
+sequences a donated buffer's aliasing after every outstanding read.
 """
 
 from __future__ import annotations

@@ -23,6 +23,7 @@ Usage:
 """
 
 import argparse
+import contextlib
 import json
 import time
 import traceback
@@ -44,10 +45,8 @@ def _mem_dict(mem) -> dict:
             "generated_code_size_in_bytes")
     out = {}
     for k in keys:
-        try:
+        with contextlib.suppress(Exception):
             out[k] = int(getattr(mem, k))
-        except Exception:
-            pass
     return out
 
 

@@ -98,7 +98,7 @@ def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
         base = opcode.rstrip("-started").rstrip(".")
         kind = None
         for ck in COLLECTIVE_KINDS:
-            if opcode == ck or opcode == ck + "-start":
+            if opcode in (ck, ck + "-start"):
                 kind = ck
                 break
         if kind is not None:

@@ -337,7 +337,12 @@ def test_compaction_reserve_covers_whole_drain_group(monkeypatch):
     drain group's pair count as the reserve (the pre-ISSUE-5
     ``min(total, pair_chunk)`` clamp under-reserved multi-chunk groups),
     and consequently the allocator never grows between a compaction and
-    its group's last chunk (no compact->grow thrash)."""
+    its group's last chunk (no compact->grow thrash).
+
+    Pinned to ``inflight=1``: with an empty pipeline ring the reserve
+    is EXACTLY the group's pair count.  The pipelined generalisation
+    (reserve additionally covers every in-flight group) is asserted in
+    tests/test_pipeline.py."""
     import repro.core.eclat as E
     from repro.data.transactions import gen_powerlaw_baskets
 
@@ -365,7 +370,8 @@ def test_compaction_reserve_covers_whole_drain_group(monkeypatch):
     minsup = 3
     out, stats = E.BitmapMiner(
         scheme="eclat", early_stop=True, block_words=2,
-        pair_chunk=pair_chunk, compact_occupancy=1.0).mine(db, minsup)
+        pair_chunk=pair_chunk, compact_occupancy=1.0,
+        inflight=1).mine(db, minsup)
     assert out == mine_bruteforce(db, minsup)
     assert stats.compactions > 0         # forcing actually fired
 

@@ -161,11 +161,21 @@ def test_row_store_alloc_free_grow():
 
 def test_store_slots_recycled_end_to_end():
     """Expanded classes return their slots: peak live rows stays far below
-    total node count on a DFS with many levels."""
+    total node count on a DFS with many levels.  Serial (``inflight=1``)
+    keeps the tight one-chunk bound; the pipelined default may hold one
+    extra group's candidate slots plus its unreleased operands in
+    flight, so its bound widens by one drain group per ring slot."""
     db, minsup = _random_db(5, n_items=(9, 9), n_trans=(28, 30))
+    expected, _ = mine(db, minsup, "eclat", early_stop=True)
     miner = BitmapMiner(scheme="eclat", early_stop=True, block_words=1,
-                        pair_chunk=8)
+                        pair_chunk=8, inflight=1)
     out, stats = miner.mine(db, minsup)
     assert stats.peak_rows <= stats.nodes + 8  # + one in-flight chunk
-    expected, _ = mine(db, minsup, "eclat", early_stop=True)
     assert out == expected
+
+    miner = BitmapMiner(scheme="eclat", early_stop=True, block_words=1,
+                        pair_chunk=8)                  # pipelined default
+    out, stats = miner.mine(db, minsup)
+    assert out == expected
+    bound = stats.nodes + 8 * (2 * miner.inflight + 1)
+    assert stats.peak_rows <= bound, (stats.peak_rows, bound)

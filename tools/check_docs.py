@@ -39,6 +39,7 @@ PROTOCOL_METHODS = [
     "release",
     "maybe_compact",
     "chunk_sort_key",
+    "chunk_widths",
 ]
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
