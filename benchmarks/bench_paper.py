@@ -348,20 +348,130 @@ def run_smoke(out_path: str = "BENCH_smoke.json") -> Dict:
     return report
 
 
+def run_full(out_path: str = "BENCH_full.json", *, scale: float = 1.0,
+             datasets: List[str] = None, block: int = None, cls: int = 1,
+             seed: int = 0) -> Dict:
+    """Paper-scale tier (ISSUE 9): the kosarak/accidents/pumsb replicas
+    at (scaled) paper row counts, streamed into the sharded row store
+    and mined by ``DistributedMiner`` on a 2-D ``(block, cls)`` mesh.
+
+    Records a per-dataset minsup-ladder *trajectory* — wall clock,
+    ``word_ops``/``word_ops_full``, ``device_calls`` and the per-host
+    peak device words of the slab — into ``BENCH_full.json`` (schema in
+    benchmarks/README.md) next to the smoke baseline.  Counters are
+    deterministic integer math over seeded streams; wall times are
+    informational (check_bench_regression.py gates only the counters).
+
+    ``scale`` multiplies every replica's transaction count (CI runs
+    ``--full --scale 0.1`` on one CPU device so the path cannot rot
+    between hardware runs); minsups are relative, so the mined regime
+    is scale-invariant.  The packing happens once per dataset at the
+    smallest ladder rung; each rung mines the rows still frequent at
+    its own threshold (the BitmapDB row order is support-ascending, so
+    that is a suffix slice — no repacking).
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.bitmap import BitmapDB
+    from repro.core.distributed import DistributedMiner
+    from repro.data.transactions import PAPER_REPLICAS, stream_paper_dataset
+    from repro.launch.mesh import make_mining_mesh
+
+    names = datasets or list(PAPER_REPLICAS)
+    mesh = make_mining_mesh(block=block, cls=cls)
+    report: Dict = {
+        "tier": "full",
+        "scale": scale,
+        "seed": seed,
+        "mesh": {"block": int(mesh.shape["block"]),
+                 "cls": int(mesh.shape["cls"]),
+                 "devices": jax.device_count(),
+                 "hosts": jax.process_count()},
+        "datasets": {},
+    }
+    hosts = max(1, jax.process_count())
+    for name in names:
+        t0 = time.perf_counter()
+        bdb, minsups = stream_paper_dataset(name, scale=scale, seed=seed)
+        pack_s = time.perf_counter() - t0
+        miner = DistributedMiner(mesh, scheme="eclat", early_stop=True,
+                                 inflight=2, autotune_chunk=True)
+        traj = []
+        # Largest rung first: coarse runs are cheap and fail fast.
+        for ms in sorted(minsups, reverse=True):
+            keep = np.flatnonzero(bdb.supports >= ms)
+            sub = BitmapDB(items=[bdb.items[i] for i in keep],
+                           bitmaps=bdb.bitmaps[keep],
+                           supports=bdb.supports[keep],
+                           n_trans=bdb.n_trans, minsup=ms,
+                           block_words=bdb.block_words)
+            t0 = time.perf_counter()
+            out, st = miner.mine_packed(sub, ms)
+            wall = time.perf_counter() - t0
+            traj.append({
+                "minsup": int(ms),
+                "wall_s": round(wall, 3),
+                "word_ops": st.word_ops,
+                "word_ops_full": st.word_ops_full,
+                "word_ops_saved_frac": round(st.word_ops_saved_frac, 4),
+                "device_calls": st.device_calls,
+                "peak_device_words_per_host":
+                    -(-st.peak_device_words // hosts),
+                "frequent_itemsets": len(out),
+            })
+            print(f"full {name} minsup={ms}: F={len(out)} "
+                  f"wall={wall:.2f}s word_ops={st.word_ops} "
+                  f"calls={st.device_calls} "
+                  f"peak_words/host={traj[-1]['peak_device_words_per_host']}",
+                  file=sys.stderr)
+        report["datasets"][name] = {
+            "dataset": {"n_trans": bdb.n_trans, "n_items_frequent":
+                        bdb.n_items, "n_blocks": bdb.n_blocks,
+                        "block_words": bdb.block_words,
+                        "pack_s": round(pack_s, 3)},
+            "trajectory": traj,
+        }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"full tier ok -> {out_path}", file=sys.stderr)
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny synthetic dataset; assert ES word-op "
                          "savings and write a BENCH_*.json artifact")
-    ap.add_argument("--out", default="BENCH_smoke.json",
-                    help="smoke-mode JSON output path")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale replica tier on the 2-D mining "
+                         "mesh; writes a BENCH_full.json trajectory")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="full tier: transaction-count multiplier "
+                         "(CI uses 0.1)")
+    ap.add_argument("--datasets", nargs="*", default=None,
+                    help="full tier: subset of paper replicas to run")
+    ap.add_argument("--mesh-block", type=int, default=None,
+                    help="full tier: block-axis size (default: all "
+                         "devices / cls)")
+    ap.add_argument("--mesh-cls", type=int, default=1,
+                    help="full tier: cls-axis size")
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default BENCH_smoke.json / "
+                         "BENCH_full.json)")
     args = ap.parse_args()
     if args.smoke:
-        run_smoke(args.out)
+        run_smoke(args.out or "BENCH_smoke.json")
+        return
+    if args.full:
+        run_full(args.out or "BENCH_full.json", scale=args.scale,
+                 datasets=args.datasets, block=args.mesh_block,
+                 cls=args.mesh_cls)
         return
     print("full paper sweep lives in benchmarks/run.py "
           "(python -m benchmarks.run --sections paper); "
-          "use --smoke for the CI smoke bench", file=sys.stderr)
+          "use --smoke for the CI smoke bench or --full for the "
+          "paper-scale tier", file=sys.stderr)
     sys.exit(2)
 
 

@@ -151,6 +151,64 @@ def compare(current: dict, baseline: dict, word_ops_tol: float,
     return failures
 
 
+def compare_full(current: dict, baseline: dict, word_ops_tol: float,
+                 peak_tol: float) -> list:
+    """Full-tier (ISSUE 9) baseline shape: per dataset, per minsup rung
+    of the trajectory — ``frequent_itemsets`` must match EXACTLY (the
+    streams are seeded and the counters integer math, so any drift is a
+    correctness bug, not noise), ``word_ops`` within tolerance,
+    ``device_calls`` and ``word_ops_saved_frac`` must not regress, and
+    ``peak_device_words_per_host`` within ``--peak-tol``.  ``wall_s`` /
+    ``pack_s`` are informational, same policy as the smoke tier."""
+    failures = []
+    if current.get("scale") != baseline.get("scale"):
+        failures.append(f"full: scale mismatch {baseline.get('scale')} "
+                        f"vs {current.get('scale')} — not comparable")
+        return failures
+    for name, base_ds in baseline["datasets"].items():
+        cur_ds = current["datasets"].get(name)
+        if cur_ds is None:
+            failures.append(f"{name}: dataset missing from current run")
+            continue
+        base_traj = {r["minsup"]: r for r in base_ds["trajectory"]}
+        cur_traj = {r["minsup"]: r for r in cur_ds["trajectory"]}
+        for ms, base_r in base_traj.items():
+            cur_r = cur_traj.get(ms)
+            if cur_r is None:
+                failures.append(f"{name}@{ms}: rung missing from current run")
+                continue
+            tag = f"{name}@{ms}"
+            if cur_r["frequent_itemsets"] != base_r["frequent_itemsets"]:
+                failures.append(
+                    f"{tag}: frequent_itemsets changed "
+                    f"{base_r['frequent_itemsets']} -> "
+                    f"{cur_r['frequent_itemsets']}")
+            if cur_r["device_calls"] > base_r["device_calls"]:
+                failures.append(
+                    f"{tag}: device_calls regressed "
+                    f"{base_r['device_calls']} -> {cur_r['device_calls']}")
+            limit = base_r["word_ops"] * (1.0 + word_ops_tol)
+            if cur_r["word_ops"] > limit:
+                failures.append(
+                    f"{tag}: word_ops regressed {base_r['word_ops']} -> "
+                    f"{cur_r['word_ops']} (limit {limit:.0f})")
+            if (cur_r["word_ops_saved_frac"]
+                    < base_r["word_ops_saved_frac"] - word_ops_tol):
+                failures.append(
+                    f"{tag}: word_ops_saved_frac regressed "
+                    f"{base_r['word_ops_saved_frac']:.4f} -> "
+                    f"{cur_r['word_ops_saved_frac']:.4f}")
+            peak_limit = (base_r["peak_device_words_per_host"]
+                          * (1.0 + peak_tol))
+            if cur_r["peak_device_words_per_host"] > peak_limit:
+                failures.append(
+                    f"{tag}: peak_device_words_per_host regressed "
+                    f"{base_r['peak_device_words_per_host']} -> "
+                    f"{cur_r['peak_device_words_per_host']} "
+                    f"(limit {peak_limit:.0f})")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="BENCH_*.json from this run")
@@ -165,6 +223,41 @@ def main() -> None:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
+
+    if current.get("tier") == "full" or baseline.get("tier") == "full":
+        if current.get("tier") != baseline.get("tier"):
+            print("BENCH REGRESSION:\n  tier mismatch: current "
+                  f"{current.get('tier')!r} vs baseline "
+                  f"{baseline.get('tier')!r}", file=sys.stderr)
+            sys.exit(1)
+        failures = compare_full(current, baseline, args.word_ops_tol,
+                                args.peak_tol)
+        for name, base_ds in baseline["datasets"].items():
+            cur_ds = current["datasets"].get(name)
+            if cur_ds is None:
+                continue
+            cur_traj = {r["minsup"]: r for r in cur_ds["trajectory"]}
+            for base_r in base_ds["trajectory"]:
+                cur_r = cur_traj.get(base_r["minsup"])
+                if cur_r is None:
+                    continue
+                print(f"{name}@{base_r['minsup']}: F "
+                      f"{base_r['frequent_itemsets']} -> "
+                      f"{cur_r['frequent_itemsets']}, word_ops "
+                      f"{base_r['word_ops']} -> {cur_r['word_ops']}, "
+                      f"calls {base_r['device_calls']} -> "
+                      f"{cur_r['device_calls']}, peak_words/host "
+                      f"{base_r['peak_device_words_per_host']} -> "
+                      f"{cur_r['peak_device_words_per_host']}, wall "
+                      f"{base_r['wall_s']} -> {cur_r['wall_s']}s",
+                      file=sys.stderr)
+        if failures:
+            print("BENCH REGRESSION:\n  " + "\n  ".join(failures),
+                  file=sys.stderr)
+            sys.exit(1)
+        print("full-tier bench diff ok (no frequent_itemsets/word_ops/"
+              "device_calls/peak_device_words regression)", file=sys.stderr)
+        return
 
     failures = compare(current, baseline, args.word_ops_tol, args.peak_tol)
     for name, base_ds in baseline["datasets"].items():

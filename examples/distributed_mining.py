@@ -1,35 +1,41 @@
 """End-to-end distributed mining: count distribution over a device mesh.
 
-Spawns an 8-device host mesh (the CPU stand-in for a pod), shards the
-TID bitmap blocks across every mesh axis, and mines a dataset with the
-unified engine: one fused gather→screen→intersect→scatter dispatch per
-pair chunk against the shared block-sharded DeviceRowStore, with the
-two-level distributed Early-Stopping screen (psum of per-shard one-block
-bounds).  Results are verified against the single-host oracle.
+Spawns an 8-device host mesh (the CPU stand-in for a pod) as a 2-D
+``(block=4, cls=2)`` mining mesh: TID bitmap blocks are sharded across
+the ``block`` axis while each ``cls`` shard evaluates its own slice of
+every candidate-pair chunk, and mines a dataset with the unified
+engine: one fused gather→screen→intersect→scatter dispatch per pair
+chunk against the shared block-sharded DeviceRowStore, with the
+two-level distributed Early-Stopping screen (psum of per-shard
+one-block bounds over ``block`` only).  Results are verified against
+the single-host oracle.
 
     python examples/distributed_mining.py        # re-execs with 8 devices
 """
 
-import os
 import sys
 
-if "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-
 sys.path.insert(0, "src")
+
+from repro.launch.forcedevices import force_host_device_count  # noqa: E402
+
+import os                                                     # noqa: E402
+
+if "XLA_FLAGS" not in os.environ:
+    force_host_device_count(8)
 
 import time                                                   # noqa: E402
 
 import jax                                                    # noqa: E402
 
-from repro.compat import make_mesh                            # noqa: E402
 from repro.core.oracle import mine                            # noqa: E402
 from repro.core.distributed import DistributedMiner           # noqa: E402
 from repro.data import make_dataset                           # noqa: E402
+from repro.launch.mesh import make_mining_mesh                # noqa: E402
 
 
 def main() -> None:
-    mesh = make_mesh((4, 2), ("data", "model"))
+    mesh = make_mining_mesh(block=4, cls=2)
     print(f"mesh: {dict(mesh.shape)} over {jax.device_count()} devices")
 
     db, minsups = make_dataset("kosarak-like")

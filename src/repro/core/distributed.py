@@ -198,15 +198,21 @@ class DistributedMiner(BitmapMiner):
         program, whose shard-local scan walks the difference bound
         ``rho - count`` and charges only nonzero-mass U blocks.
 
-    ``tid_axes`` defaults to every mesh axis (maximum block
-    parallelism).  ``capacity`` is an initial-size hint only: the slab
-    grows instead of raising.  ``pair_axis`` is accepted for
-    backward compatibility and ignored — pairs are replicated; the
-    psum'd bound/count vectors are the only cross-device traffic.
+    ``tid_axes`` defaults to every mesh axis not named by ``cls_axes``
+    (maximum block parallelism); ``cls_axes`` defaults to ``("cls",)``
+    when the mesh has an axis of that name (the ``make_mining_mesh``
+    convention) and to none otherwise.  ``capacity`` is an initial-size
+    hint only: the slab grows instead of raising.  ``pair_axis`` is
+    accepted for backward compatibility and ignored — pairs are
+    replicated over the block axes; under a 2-D mesh (ISSUE 9) each
+    cls-shard evaluates its contiguous slice of the chunk's pair
+    vectors, so the psum'd per-pair vectors shrink by n_cls and the
+    frontier scan itself parallelizes.
     """
 
     def __init__(self, mesh: Mesh, *,
                  tid_axes: Tuple[str, ...] = None,
+                 cls_axes: Tuple[str, ...] = None,
                  pair_axis: str = None,
                  scheme: str = "eclat",
                  early_stop: bool = True,
@@ -226,7 +232,25 @@ class DistributedMiner(BitmapMiner):
                          autotune_chunk=autotune_chunk)
         del pair_axis
         self.mesh = mesh
-        self.tid_axes = tuple(tid_axes) if tid_axes else tuple(mesh.axis_names)
+        if cls_axes is None:
+            # make_mining_mesh names its pair axis "cls"; honour that by
+            # default so callers don't have to thread axis tuples.
+            cls_axes = ("cls",) if (tid_axes is None
+                                    and "cls" in mesh.axis_names) else ()
+        self.cls_axes = tuple(cls_axes)
+        if tid_axes is None:
+            tid_axes = tuple(a for a in mesh.axis_names
+                             if a not in self.cls_axes)
+        self.tid_axes = tuple(tid_axes)
+        if set(self.tid_axes) & set(self.cls_axes):
+            raise ValueError("tid_axes and cls_axes overlap")
+        self.n_cls = 1
+        for ax in self.cls_axes:
+            self.n_cls *= mesh.shape[ax]
+        # Chunk slices must land on cls-shard boundaries so each shard's
+        # pair slice is a contiguous, bucket-sorted run (core.frontier
+        # reads this attribute).
+        self.chunk_quantum = self.n_cls
         self.capacity = capacity
         # Two fused shard_map programs share the factory's lru_cache:
         # ``_fused`` ("and") extends tidset classes — it keeps its
@@ -236,10 +260,16 @@ class DistributedMiner(BitmapMiner):
         # skip-aware work counter.
         self._fused = ops.make_screen_and_intersect_sharded(
             mesh, tid_axes=self.tid_axes, mode="and",
-            early_stop=early_stop)
+            early_stop=early_stop, cls_axes=self.cls_axes)
         self._fused_diff = ops.make_screen_and_intersect_sharded(
             mesh, tid_axes=self.tid_axes, mode="andnot",
-            early_stop=early_stop)
+            early_stop=early_stop, cls_axes=self.cls_axes)
+
+    def _autotune_words_per_pair(self, bdb: BitmapDB) -> int:
+        # Each cls-shard holds 1/n_cls of the chunk's gathered rows, so
+        # the per-device VMEM budget divides by n_cls (satellite 6) —
+        # ceil so the width never overshoots the budget.
+        return -(-(bdb.n_blocks * self.block_words) // self.n_cls)
 
     def _make_store(self, bdb: BitmapDB) -> DeviceRowStore:
         return DeviceRowStore(

@@ -275,14 +275,28 @@ class BitmapMiner:
         # a separate (two-dispatch) fast path.
         self.metrics = metrics
 
+    # Dispatch chunks are sliced in units of this many pairs so each
+    # cls-shard's slice stays aligned; the 2-D DistributedMiner sets it
+    # to its cls-axis size (see core.frontier._chunk_slices).
+    chunk_quantum = 1
+
     def mine(self, db: Sequence[Sequence[Hashable]], minsup: int,
              ) -> Tuple[ItemsetSupports, DeviceMiningStats]:
+        if minsup < 1:
+            raise ValueError("minsup must be an absolute count >= 1")
+        return self.mine_packed(
+            BitmapDB.from_db(db, minsup, self.block_words), minsup)
+
+    def mine_packed(self, bdb: BitmapDB, minsup: int,
+                    ) -> Tuple[ItemsetSupports, DeviceMiningStats]:
+        """Mine a pre-packed :class:`BitmapDB` (the paper-scale bench
+        streams transactions straight into one, skipping the host-side
+        list-of-lists detour that ``mine`` takes)."""
         if minsup < 1:
             raise ValueError("minsup must be an absolute count >= 1")
         stats = DeviceMiningStats()
         t0 = time.perf_counter()
 
-        bdb = BitmapDB.from_db(db, minsup, self.block_words)
         out: ItemsetSupports = {}
         for r, item in enumerate(bdb.items):
             out[frozenset((item,))] = int(bdb.supports[r])
@@ -313,7 +327,7 @@ class BitmapMiner:
         # same per-pair word mass, so the width is one run-wide value
         # (the N-list engine's is per length bucket).
         self._chunk_width = (chunk_width_for(
-            bdb.n_blocks * self.block_words, self.pair_chunk,
+            self._autotune_words_per_pair(bdb), self.pair_chunk,
             _PAIR_BUCKETS, BITMAP_REF_ROW_WORDS)
             if self.autotune_chunk else None)
         sched = FrontierScheduler(self, self.pair_chunk,
@@ -324,6 +338,14 @@ class BitmapMiner:
         stats.note_scheduler(sched)
         stats.runtime_s = time.perf_counter() - t0
         return out, stats
+
+    def _autotune_words_per_pair(self, bdb: BitmapDB) -> int:
+        """Per-DEVICE word mass one pair moves — the autotune budget's
+        numerator.  The 2-D distributed miner overrides this to divide
+        by its cls-axis size: each cls-shard only evaluates 1/n_cls of
+        the chunk, so at equal per-device VMEM the chunk can be n_cls
+        times wider (ISSUE 9 satellite 6)."""
+        return bdb.n_blocks * self.block_words
 
     def _make_store(self, bdb: BitmapDB) -> DeviceRowStore:
         """Allocate the device slab.  Subclasses (the distributed miner)

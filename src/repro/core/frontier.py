@@ -118,6 +118,7 @@ class EngineAccounting:
     grows: int = 0               # allocator slab reallocations
     compactions: int = 0         # allocator compaction epochs
     peak_live: int = 0           # peak live allocator mass
+    peak_device_words: int = 0   # high-water slab words, all shards
     compaction_occupancy: float = 0.0
     runtime_s: float = 0.0
     # Survivor-only materialization telemetry (ISSUE 5): every fused
@@ -145,6 +146,10 @@ class EngineAccounting:
         self.grows = alloc.grows
         self.compactions = alloc.compactions
         self.peak_live = alloc.peak_live
+        # Row-store slabs report their high-water device footprint; the
+        # N-list pool has no single-slab equivalent (0 there).
+        self.peak_device_words = int(
+            getattr(alloc, "peak_device_words", 0))
         self.compaction_occupancy = alloc.last_compaction_occupancy
 
     def note_scheduler(self, sched: "FrontierScheduler") -> None:
@@ -261,6 +266,13 @@ class FrontierScheduler:
         # fill the widest chunk the client may request.
         self.drain_target = (int(drain_target) if drain_target
                              else self.pair_chunk)
+        # 2-D dispatch alignment (ISSUE 9): a client whose dispatch
+        # splits each chunk over a cls mesh axis advertises the shard
+        # count; chunk boundaries are rounded down to a multiple of it
+        # so every cls-shard's slice is an equal contiguous run of the
+        # sorted pair columns (bucket-sorted by construction — a
+        # contiguous slice of a sorted chunk is sorted).
+        self.chunk_quantum = max(1, int(getattr(client, "chunk_quantum", 1)))
         self._stack: List[ClassNode] = []
         self._ring: Deque[_InflightGroup] = deque()
         # Pipeline telemetry: a group counts as "overlapped" iff an
@@ -338,7 +350,13 @@ class FrontierScheduler:
                 # allocate), and in-flight groups allocate at
                 # retirement, so a smaller reserve let a compaction
                 # shrink to a size the pipeline immediately regrew
-                # (compact -> grow thrash).
+                # (compact -> grow thrash).  Under a 2-D (block, cls)
+                # dispatch this reserve is already the UNION of all
+                # cls-shards' pending handles (satellite 6 audit):
+                # ``g.total`` counts the group's GLOBAL pairs — slots
+                # are allocated host-side per pair before the chunk is
+                # cls-split on device — so no per-shard accounting can
+                # undercount it.
                 pending = sum(g.total for g in ring)
                 mapping = self.client.maybe_compact(total + pending)
                 if mapping is not None:
@@ -418,6 +436,7 @@ class FrontierScheduler:
         each chunk greedily while it stays within the width cap of every
         member — chunk size <= min(widths in chunk) by construction."""
         slices: List[Tuple[int, slice]] = []
+        q = self.chunk_quantum
         lo = 0
         while lo < total:
             if widths is None:
@@ -426,6 +445,13 @@ class FrontierScheduler:
                 end = lo + 1
                 while end < total and (end - lo) < int(widths[end]):
                     end += 1
+            if q > 1 and end < total and (end - lo) > q:
+                # Align non-final chunks to the cls-shard count so each
+                # shard's slice covers real pairs evenly (the dispatch
+                # pads any remainder with dropped writes — correct but
+                # wasted lanes).  Rounding DOWN keeps every width cap
+                # satisfied.
+                end = lo + ((end - lo) // q) * q
             slices.append((lo, slice(lo, end)))
             lo = end
         return slices

@@ -160,10 +160,26 @@ class DeviceRowStore:
         self.compactions = 0
         self.last_compaction_occupancy = 0.0
         self.peak_live = n
+        self.peak_capacity = cap
 
     @property
     def capacity(self) -> int:
         return int(self.rows.shape[0])
+
+    @property
+    def words_per_row(self) -> int:
+        """uint32 words one slab row pins on device (bitmap row + its
+        suffix-table row)."""
+        return self.n_blocks * self.block_words + int(self.suffix.shape[1])
+
+    @property
+    def peak_device_words(self) -> int:
+        """High-water device footprint of the slab in uint32 words,
+        summed over every shard (compaction can shrink the LIVE slab but
+        not this peak).  Divide by ``jax.process_count()`` for the bench
+        tier's per-host figure — the slab is sharded evenly over the
+        block axis."""
+        return self.peak_capacity * self.words_per_row
 
     @property
     def n_live(self) -> int:
@@ -203,6 +219,7 @@ class DeviceRowStore:
         self.suffix = suffix
         self._free.extend(range(new - 1, old - 1, -1))
         self.grows += 1
+        self.peak_capacity = max(self.peak_capacity, new)
 
     def compact(self, *, reserve: int = 0, backend: str = "jnp",
                 ) -> np.ndarray:

@@ -209,45 +209,76 @@ def screen_and_diff(rows, suffix, ua, vb, slots, rho_parent, minsup,
 def make_screen_and_intersect_sharded(mesh: Mesh,
                                       tid_axes: Tuple[str, ...] = (),
                                       mode: str = "and",
-                                      early_stop: bool = True):
+                                      early_stop: bool = True,
+                                      cls_axes: Tuple[str, ...] = ()):
     """Build the fused sharded dispatch for ``mesh`` (ISSUE 2 tentpole;
-    shard-local in-dispatch block ES added by ISSUE 4).
+    shard-local in-dispatch block ES added by ISSUE 4; 2-D
+    ``(block, cls)`` candidate-class sharding added by ISSUE 9).
 
     Returns a jitted shard_map program
     ``fused(rows, suffix, ua, vb, slots, rho_parent, minsup,
     n_real_blocks=None) -> (rows, suffix, bound, count, blocks,
     alive)`` that is bit-exact against
     ``ref.screen_and_intersect_sharded_ref`` with ``n_shards`` = the
-    product of ``tid_axes`` sizes.  ``n_real_blocks`` is the unpadded
+    product of ``tid_axes`` sizes and ``n_cls`` = the product of
+    ``cls_axes`` sizes.  ``n_real_blocks`` is the unpadded
     block count: each shard's scan count is clamped to its real blocks
     so ``blocks`` (the word_ops numerator) never charges the all-zero
     pad tail the store adds to divide the shard count.  Layouts (``DeviceRowStore``
     sharded mode): ``rows uint32 (cap, nb, bw)`` block-sharded over
-    ``tid_axes``; ``suffix int32 (cap, n_shards*(nb_local+1))``
-    column-sharded so each shard owns its local suffix table; pair
-    index/rho vectors replicated.
+    ``tid_axes`` (replicated over ``cls_axes``); ``suffix int32
+    (cap, n_shards*(nb_local+1))`` column-sharded so each block shard
+    owns its local suffix table; pair index/rho vectors replicated
+    over the block axes and **sharded over** ``cls_axes`` — each cls
+    shard evaluates a disjoint contiguous slice of the chunk's pairs.
 
     One dispatch per pair chunk: gather operands from the block-sharded
-    slab, psum the screen's per-pair slack (mode "and" with ES: one
-    small ``int32[n_pairs]`` collective), walk the local blocks with the
+    slab, psum the screen's per-pair slack over the **block axes only**
+    (mode "and" with ES: one small ``int32[n_pairs / n_cls]``
+    collective per cls shard), walk the local blocks with the
     shared blocked-ES scan against the conservative shard-local
     threshold ``minsup - slack`` (each shard aborts mid-scan exactly
     like the single-device path once it has *proven* the pair globally
     infrequent — see the ref docstring for the bound), then one fused
     psum of the per-shard ``(count, blocks, dead, screen-bound)``
-    vectors and a **survivor-only** shard-local child scatter: the psum
+    vectors — again over the block axes only, so the per-pair outputs
+    come back ``cls``-sharded and the host sees the full chunk in pair
+    order — and a **survivor-only** shard-local child scatter: the psum
     completes before the scatter phase and gates it, so candidates
     whose global support misses minsup (or that any shard aborted)
-    cost zero scatter words.  ``rows``/``suffix`` are DONATED: callers
-    must replace their handles.
+    cost zero scatter words.
+
+    2-D scatter locality: each device writes only its *block* slice of
+    each surviving child — scatter traffic never crosses block shards.
+    Because the slab is replicated along ``cls``, the per-slice
+    survivors ``(Z, slots, child suffix)`` are ``all_gather``-ed along
+    the cls axes first (one tiled collective of the chunk's child rows
+    per block-shard row of the mesh) so every cls replica performs the
+    identical scatter and the slab stays replication-consistent.  The
+    scan itself — the O(n_pairs * n_blocks * block_words) term — is
+    split ``n_cls`` ways; the all-gather moves each child row once,
+    which is the same order as the scatter it feeds.
+    ``rows``/``suffix`` are DONATED: callers must replace their
+    handles.
     """
     if mode not in ("and", "andnot"):
         raise ValueError(f"bad mode {mode!r}")
-    tid_axes = tuple(tid_axes) if tid_axes else tuple(mesh.axis_names)
+    cls_axes = tuple(cls_axes)
+    tid_axes = (tuple(tid_axes) if tid_axes else
+                tuple(a for a in mesh.axis_names if a not in cls_axes))
+    if set(tid_axes) & set(cls_axes):
+        raise ValueError(f"tid_axes {tid_axes} and cls_axes {cls_axes} "
+                         f"overlap")
     tid_spec = tid_axes if len(tid_axes) > 1 else tid_axes[0]
     rows_spec = P(None, tid_spec, None)
     suffix_spec = P(None, tid_spec)
-    vec = P(None)
+    n_cls = 1
+    for ax in cls_axes:
+        n_cls *= mesh.shape[ax]
+    if cls_axes:
+        vec = P(cls_axes if len(cls_axes) > 1 else cls_axes[0])
+    else:
+        vec = P(None)
 
     def fused(rows, suffix, ua, vb, slots, rho_parent, minsup, n_real):
         # Local shapes: rows (cap, nb_local, bw), suffix (cap, nb_local+1).
@@ -318,6 +349,21 @@ def make_screen_and_intersect_sharded(mesh: Mesh,
         child_suffix = jnp.concatenate(
             [jnp.cumsum(zpc[:, ::-1], axis=-1)[:, ::-1],
              jnp.zeros((zpc.shape[0], 1), jnp.int32)], axis=-1)
+        if cls_axes:
+            # 2-D mesh (ISSUE 9): the slab is replicated along cls, so
+            # the scatter must be too.  Re-assemble the full chunk's
+            # survivors from the per-slice results — one tiled
+            # all_gather along the cls axes of each device's *local
+            # block slice* of Z (traffic stays within a block-shard row
+            # of the mesh; no data ever crosses block shards).  Slices
+            # are contiguous in pair order, so the gathered chunk is in
+            # the original pair order and every cls replica performs
+            # the identical block-shard-local scatter.
+            Z = jax.lax.all_gather(Z, cls_axes, axis=0, tiled=True)
+            slots_eff = jax.lax.all_gather(slots_eff, cls_axes, axis=0,
+                                           tiled=True)
+            child_suffix = jax.lax.all_gather(child_suffix, cls_axes,
+                                              axis=0, tiled=True)
         rows = rows.at[slots_eff].set(Z, mode="drop")
         suffix = suffix.at[slots_eff].set(child_suffix, mode="drop")
         return rows, suffix, bound, count, blocks, alive_g
@@ -333,10 +379,24 @@ def make_screen_and_intersect_sharded(mesh: Mesh,
                  n_real_blocks=None):
         if n_real_blocks is None:       # no padding: every block is real
             n_real_blocks = rows.shape[1]
-        return jitted(rows, suffix,
-                      jnp.asarray(ua, jnp.int32), jnp.asarray(vb, jnp.int32),
-                      jnp.asarray(slots, jnp.int32),
-                      jnp.asarray(rho_parent, jnp.int32),
+        ua = jnp.asarray(ua, jnp.int32)
+        vb = jnp.asarray(vb, jnp.int32)
+        slots = jnp.asarray(slots, jnp.int32)
+        rho_parent = jnp.asarray(rho_parent, jnp.int32)
+        pad = -int(ua.shape[0]) % n_cls
+        if pad:
+            # The pair chunk must divide the cls axes (shard_map splits
+            # axis 0 evenly).  Engine chunks are bucket-padded already
+            # (every ``PAIR_CHUNK_BUCKETS`` width divides the practical
+            # cls counts); this is the safety net for direct callers.
+            # Pad slots point past the slab so the writes drop.
+            ua = jnp.concatenate([ua, jnp.zeros(pad, jnp.int32)])
+            vb = jnp.concatenate([vb, jnp.zeros(pad, jnp.int32)])
+            slots = jnp.concatenate(
+                [slots, jnp.full(pad, jnp.int32(rows.shape[0]))])
+            rho_parent = jnp.concatenate(
+                [rho_parent, jnp.zeros(pad, jnp.int32)])
+        return jitted(rows, suffix, ua, vb, slots, rho_parent,
                       jnp.asarray(minsup, jnp.int32),
                       jnp.asarray(n_real_blocks, jnp.int32))
 

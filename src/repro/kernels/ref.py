@@ -293,7 +293,8 @@ def screen_and_diff_ref(
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_shards", "mode", "early_stop"))
+                   static_argnames=("n_shards", "n_cls", "mode",
+                                    "early_stop"))
 def screen_and_intersect_sharded_ref(
     rows: jnp.ndarray,         # uint32 (capacity, n_blocks, bw) row store
     suffix: jnp.ndarray,       # int32  (capacity, n_shards*(nb_local+1))
@@ -305,6 +306,7 @@ def screen_and_intersect_sharded_ref(
     n_real_blocks=None,        # int32  scalar: unpadded block count
     *,
     n_shards: int,
+    n_cls: int = 1,
     mode: str = "and",
     early_stop: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
@@ -366,6 +368,19 @@ def screen_and_intersect_sharded_ref(
     scan visited are charged, matching :func:`bitmap_diff_es_ref` —
     pads are zero-mass, so they discount themselves.
     ``alive`` is True iff every shard finished its scan alive.
+
+    2-D ``(block, cls)`` mesh (ISSUE 9): ``n_cls`` pins the cls-split
+    semantics.  The pair chunk is cut into ``n_cls`` *contiguous*
+    slices (``n_pairs`` must divide); slice ``c`` is evaluated by cls
+    shard ``c`` over every block shard, with the slack/count psums
+    running over the **block axis only** — the per-pair math never
+    crosses a slice boundary, so every per-pair output (bound, count,
+    blocks, alive) and every scattered child is bit-for-bit identical
+    to the ``n_cls=1`` run.  That invariance IS the contract: this ref
+    evaluates the slices separately and concatenates, so a 2-D
+    ``ops.make_screen_and_intersect_sharded`` program that all-gathers
+    its per-slice survivors along ``cls`` before the block-shard-local
+    scatter is pinned against it at any mesh shape.
     """
     if mode not in ("and", "andnot"):
         raise ValueError(f"bad mode {mode!r}")
@@ -373,68 +388,89 @@ def screen_and_intersect_sharded_ref(
     cap, nb, bw = rows.shape
     nbl = nb // n_shards
     minsup = jnp.asarray(minsup, jnp.int32)
-
-    U = jnp.take(rows, ua, axis=0).reshape(n_pairs, n_shards, nbl, bw)
-    V = jnp.take(rows, vb, axis=0).reshape(n_pairs, n_shards, nbl, bw)
-    su = jnp.take(suffix, ua, axis=0).reshape(n_pairs, n_shards, nbl + 1)
-    sv = jnp.take(suffix, vb, axis=0).reshape(n_pairs, n_shards, nbl + 1)
-
-    if not early_stop:
-        thr = jnp.full((n_pairs, n_shards), jnp.iinfo(jnp.int32).min,
-                       jnp.int32)
-    elif mode == "and":
-        m = jnp.minimum(su[:, :, 0], sv[:, :, 0])      # (n, S) local mass
-        slack = m.sum(axis=1, keepdims=True) - m       # psum(m) - m
-        thr = minsup - slack
-    else:
-        thr = jnp.broadcast_to(minsup, (n_pairs, n_shards))
-
-    flat = (n_pairs * n_shards,)
-    Zf, cnt_f, blocks_f, alive_f = _blocked_es_scan(
-        U.reshape(flat + (nbl, bw)), V.reshape(flat + (nbl, bw)),
-        su.reshape(flat + (nbl + 1,)), sv.reshape(flat + (nbl + 1,)),
-        jnp.repeat(rho_parent.astype(jnp.int32), n_shards),
-        thr.reshape(flat), mode=mode)
-    Z = Zf.reshape(n_pairs, n_shards, nbl, bw)
-    zpc = popcount32(Z).sum(axis=-1)                # (n, S, nbl)
-    count = cnt_f.reshape(n_pairs, n_shards).sum(axis=1)
+    if n_cls < 1 or n_pairs % n_cls:
+        raise ValueError(
+            f"pair chunk of {n_pairs} does not divide n_cls={n_cls}")
     if n_real_blocks is None:
         n_real_blocks = nb
-    if mode == "andnot":
-        # Diffset work counter (ISSUE 6): charge only the *nonzero-mass*
-        # U blocks each shard's scan visited, like the single-device
-        # ``_blocked_diff_scan``.  ``blocks_f`` counts the alive-visited
-        # prefix, so ``k < blocks_f`` marks visited local blocks; pad
-        # blocks are all-zero (zero mass) and discount themselves, so no
-        # real-block clamp is needed.
-        umass = su[:, :, :-1] - su[:, :, 1:]        # (n, S, nbl)
-        visited = (jnp.arange(nbl, dtype=jnp.int32)[None, None, :]
-                   < blocks_f.reshape(n_pairs, n_shards)[:, :, None])
-        blocks = jnp.logical_and(umass > 0, visited).sum(
-            axis=(1, 2)).astype(jnp.int32)
-    else:
-        # Pad blocks live at each tail shard's local END (the global pad
-        # is the tail of the block axis), so clamping a shard's scan
-        # count to its real-block count discounts them exactly.
-        real_local = jnp.clip(
-            jnp.asarray(n_real_blocks, jnp.int32)
-            - jnp.arange(n_shards, dtype=jnp.int32) * nbl, 0, nbl)
-        blocks = jnp.minimum(blocks_f.reshape(n_pairs, n_shards),
-                             real_local[None, :]).sum(axis=1)
-    alive = alive_f.reshape(n_pairs, n_shards).all(axis=1)
-    c0 = zpc[:, :, 0]                               # (n, S) per-shard block 0
-    if mode == "and":
-        bound = (c0 + jnp.minimum(su[:, :, 1], sv[:, :, 1])).sum(axis=1)
-    else:
-        bound = rho_parent.astype(jnp.int32) - c0.sum(axis=1)
+
+    def eval_slice(ua_s, vb_s, rho_s):
+        """One cls shard's pair slice: everything up to (but excluding)
+        the scatter, exactly the 1-D per-pair math."""
+        n_loc = ua_s.shape[0]
+        U = jnp.take(rows, ua_s, axis=0).reshape(n_loc, n_shards, nbl, bw)
+        V = jnp.take(rows, vb_s, axis=0).reshape(n_loc, n_shards, nbl, bw)
+        su = jnp.take(suffix, ua_s, axis=0).reshape(n_loc, n_shards,
+                                                    nbl + 1)
+        sv = jnp.take(suffix, vb_s, axis=0).reshape(n_loc, n_shards,
+                                                    nbl + 1)
+
+        if not early_stop:
+            thr = jnp.full((n_loc, n_shards), jnp.iinfo(jnp.int32).min,
+                           jnp.int32)
+        elif mode == "and":
+            m = jnp.minimum(su[:, :, 0], sv[:, :, 0])  # (n, S) local mass
+            slack = m.sum(axis=1, keepdims=True) - m   # psum(m, block) - m
+            thr = minsup - slack
+        else:
+            thr = jnp.broadcast_to(minsup, (n_loc, n_shards))
+
+        flat = (n_loc * n_shards,)
+        Zf, cnt_f, blocks_f, alive_f = _blocked_es_scan(
+            U.reshape(flat + (nbl, bw)), V.reshape(flat + (nbl, bw)),
+            su.reshape(flat + (nbl + 1,)), sv.reshape(flat + (nbl + 1,)),
+            jnp.repeat(rho_s.astype(jnp.int32), n_shards),
+            thr.reshape(flat), mode=mode)
+        Z = Zf.reshape(n_loc, n_shards, nbl, bw)
+        zpc = popcount32(Z).sum(axis=-1)            # (n, S, nbl)
+        count = cnt_f.reshape(n_loc, n_shards).sum(axis=1)
+        if mode == "andnot":
+            # Diffset work counter (ISSUE 6): charge only the
+            # *nonzero-mass* U blocks each shard's scan visited, like
+            # the single-device ``_blocked_diff_scan``.  ``blocks_f``
+            # counts the alive-visited prefix, so ``k < blocks_f``
+            # marks visited local blocks; pad blocks are all-zero
+            # (zero mass) and discount themselves, so no real-block
+            # clamp is needed.
+            umass = su[:, :, :-1] - su[:, :, 1:]    # (n, S, nbl)
+            visited = (jnp.arange(nbl, dtype=jnp.int32)[None, None, :]
+                       < blocks_f.reshape(n_loc, n_shards)[:, :, None])
+            blocks = jnp.logical_and(umass > 0, visited).sum(
+                axis=(1, 2)).astype(jnp.int32)
+        else:
+            # Pad blocks live at each tail shard's local END (the global
+            # pad is the tail of the block axis), so clamping a shard's
+            # scan count to its real-block count discounts them exactly.
+            real_local = jnp.clip(
+                jnp.asarray(n_real_blocks, jnp.int32)
+                - jnp.arange(n_shards, dtype=jnp.int32) * nbl, 0, nbl)
+            blocks = jnp.minimum(blocks_f.reshape(n_loc, n_shards),
+                                 real_local[None, :]).sum(axis=1)
+        alive = alive_f.reshape(n_loc, n_shards).all(axis=1)
+        c0 = zpc[:, :, 0]                           # (n, S) per-shard blk 0
+        if mode == "and":
+            bound = (c0 + jnp.minimum(su[:, :, 1],
+                                      sv[:, :, 1])).sum(axis=1)
+        else:
+            bound = rho_s.astype(jnp.int32) - c0.sum(axis=1)
+        child_suffix = jnp.concatenate(
+            [jnp.cumsum(zpc[:, :, ::-1], axis=-1)[:, :, ::-1],
+             jnp.zeros((n_loc, n_shards, 1), jnp.int32)],
+            axis=-1).reshape(n_loc, n_shards * (nbl + 1))
+        return (Z.reshape(n_loc, nb, bw), child_suffix, bound, count,
+                blocks, alive)
+
+    n_loc = n_pairs // n_cls
+    parts = [eval_slice(ua[c * n_loc:(c + 1) * n_loc],
+                        vb[c * n_loc:(c + 1) * n_loc],
+                        rho_parent[c * n_loc:(c + 1) * n_loc])
+             for c in range(n_cls)]
+    Z, child_suffix, bound, count, blocks, alive = (
+        jnp.concatenate([p[i] for p in parts]) for i in range(6))
 
     keep = _survivor_mask(count, alive, rho_parent, minsup, mode=mode)
     slots_eff = jnp.where(keep, slots, jnp.int32(cap))
-    child_suffix = jnp.concatenate(
-        [jnp.cumsum(zpc[:, :, ::-1], axis=-1)[:, :, ::-1],
-         jnp.zeros((n_pairs, n_shards, 1), jnp.int32)],
-        axis=-1).reshape(n_pairs, n_shards * (nbl + 1))
-    rows = rows.at[slots_eff].set(Z.reshape(n_pairs, nb, bw), mode="drop")
+    rows = rows.at[slots_eff].set(Z, mode="drop")
     suffix = suffix.at[slots_eff].set(child_suffix, mode="drop")
     return rows, suffix, bound, count, blocks, alive
 

@@ -29,3 +29,27 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> jax.sharding.Mesh:
     """Tiny mesh over whatever devices exist (tests / single-host runs)."""
     return make_mesh(shape, axes)
+
+
+def make_mining_mesh(*, block: int | None = None, cls: int = 1,
+                     multihost: bool = False) -> jax.sharding.Mesh:
+    """2-D ``(block, cls)`` mesh for distributed mining (ISSUE 9).
+
+    ``block`` shards the TID-bitmap axis (partial counts psum over it);
+    ``cls`` shards the candidate-pair axis of each dispatch chunk (no
+    reduction crosses it).  Train scaffolding keeps its ``(data, model)``
+    helpers above — mining paths must not reuse those axis names.
+
+    ``block=None`` takes every device not consumed by ``cls``.  With
+    ``multihost=True`` the jax.distributed bootstrap runs first (no-op
+    off-cluster), so ``jax.device_count()`` spans the whole slice.
+    """
+    if multihost:
+        from repro.launch.multihost import init_distributed
+        init_distributed()
+    if cls < 1 or jax.device_count() % cls:
+        raise ValueError(
+            f"cls={cls} must divide device count {jax.device_count()}")
+    if block is None:
+        block = jax.device_count() // cls
+    return make_mesh((block, cls), ("block", "cls"))

@@ -15,6 +15,14 @@ Two guards:
    introspect), kept here as the single explicit list.  Adding a
    protocol method without documenting it fails lint.
 
+3. **Required-term coverage (ISSUE 9).**  The 2-D sharding and
+   full-tier bench surfaces must stay documented: docs/ARCHITECTURE.md
+   has to mention the mining-mesh builder, the ``cls`` axis semantics
+   and the scheduler's ``chunk_quantum`` contract, and
+   benchmarks/README.md has to document the ``--full`` tier and the
+   ``BENCH_full.json`` schema.  Renaming or dropping those sections
+   fails lint.
+
 Usage: ``python tools/check_docs.py`` (exit 1 on any failure).
 """
 
@@ -41,6 +49,23 @@ PROTOCOL_METHODS = [
     "chunk_sort_key",
     "chunk_widths",
 ]
+
+# Required-term coverage (ISSUE 9): file -> terms that must appear.
+REQUIRED_TERMS = {
+    "docs/ARCHITECTURE.md": [
+        "make_mining_mesh",      # the 2-D mesh builder
+        "cls",                   # the pair-sharding axis
+        "psum",                  # reduction axes must stay documented
+        "chunk_quantum",         # the scheduler alignment contract
+        "all_gather",            # scatter locality story
+    ],
+    "benchmarks/README.md": [
+        "--full",
+        "BENCH_full.json",
+        "peak_device_words_per_host",
+        "stream_paper_dataset",
+    ],
+}
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
@@ -97,9 +122,23 @@ def check_protocol_list_current() -> list:
     ]
 
 
+def check_required_terms() -> list:
+    failures = []
+    for rel, terms in REQUIRED_TERMS.items():
+        path = REPO / rel
+        if not path.exists():
+            failures.append(f"{rel} is missing")
+            continue
+        text = path.read_text(encoding="utf-8")
+        failures.extend(
+            f"{rel}: required term `{t}` is no longer documented"
+            for t in terms if t not in text)
+    return failures
+
+
 def main() -> None:
     failures = (check_links() + check_protocol_documented()
-                + check_protocol_list_current())
+                + check_protocol_list_current() + check_required_terms())
     if failures:
         print("DOCS CHECK FAILED:\n  " + "\n  ".join(failures),
               file=sys.stderr)
