@@ -109,7 +109,9 @@ def nl_pad_len_np(lengths: np.ndarray) -> np.ndarray:
     """Vectorized :func:`nl_pad_len` (host): the per-pair length-bucket
     key the frontier scheduler sorts drained pairs by so one huge N-list
     cannot widen the gather for a whole chunk of small ones."""
+    # host-sync: host length vectors (scheduler sort key); no device value
     lengths = np.asarray(lengths, np.int64)
+    # host-sync: host bucket-table constant; no device value touched
     buckets = np.asarray(NL_LEN_BUCKETS, np.int64)
     idx = np.searchsorted(buckets, np.maximum(lengths, 0))
     out = buckets[np.minimum(idx, len(buckets) - 1)]
@@ -165,6 +167,7 @@ def pack_tidlists(tidlists: Sequence[Sequence[int]], n_trans: int,
     for r, tids in enumerate(tidlists):
         if len(tids) == 0:
             continue
+        # host-sync: pack-time host TID lists; no device value touched
         t = np.asarray(tids, dtype=np.int64)
         if t.min() < 0 or t.max() >= n_trans:
             raise ValueError("TID out of range")
@@ -175,6 +178,7 @@ def pack_tidlists(tidlists: Sequence[Sequence[int]], n_trans: int,
 
 def unpack_row(row: np.ndarray) -> np.ndarray:
     """Inverse of :func:`pack_tidlists` for one row -> sorted 0-based TIDs."""
+    # host-sync: tests/debug unpack helper (readback is the caller's choice)
     flat = np.asarray(row, dtype=np.uint32).reshape(-1)
     bits = np.unpackbits(flat.view(np.uint8), bitorder="little")
     return np.nonzero(bits)[0].astype(np.int64)
@@ -234,6 +238,7 @@ class BitmapDB:
                 if r is not None:
                     tidlists[r].append(tid)
         bitmaps = pack_tidlists(tidlists, max(len(db), 1), block_words)
+        # host-sync: pack-time host supports; no device value touched
         supports = np.array([len(t) for t in tidlists], dtype=np.int32)
         return cls(items=items, bitmaps=bitmaps, supports=supports,
                    n_trans=len(db), minsup=minsup, block_words=block_words)

@@ -56,6 +56,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.bitmap import DEFAULT_BLOCK_WORDS, BitmapDB, popcount32
+from repro.core.guards import host_sync
 from repro.core.eclat import (BitmapMiner, DeviceMiningStats, _bucket_pad,
                               ItemsetSupports)  # noqa: F401 (re-export)
 from repro.core.rowstore import DeviceRowStore
@@ -304,10 +305,13 @@ class DistributedMiner(BitmapMiner):
         """Blocking readback of one sharded dispatch + attribution."""
         stats = self._stats
         bound, count, blocks, scan_alive = raw
-        bound = np.asarray(bound[:n])
-        count = np.asarray(count[:n])
-        blocks = np.asarray(blocks[:n])
-        scan_alive = np.asarray(scan_alive[:n])
+        # host-sync: the audited group-retirement readback (PR 7) — one
+        # deliberate d2h per retired sharded dispatch
+        with host_sync("group-retirement accounting readback"):
+            bound = np.asarray(bound[:n])
+            count = np.asarray(count[:n])
+            blocks = np.asarray(blocks[:n])
+            scan_alive = np.asarray(scan_alive[:n])
         # In-dispatch shard-local block ES (ISSUE 4): each shard walks its
         # local blocks against the conservative threshold
         # ``minsup - slack`` (slack = the screen mass every OTHER shard

@@ -83,6 +83,7 @@ from repro.core.bitmap import (BITMAP_REF_ROW_WORDS, BitmapDB,
                                bucket_pad, chunk_width_for)
 from repro.core.frontier import (Child, ClassNode, EngineAccounting,
                                  FrontierScheduler)
+from repro.core.guards import host_sync
 from repro.core.rowstore import DeviceRowStore
 from repro.kernels import ops
 
@@ -454,6 +455,7 @@ class BitmapMiner:
 
     def make_class(self, parent: ClassNode,
                    children: List[Child]) -> ClassNode:
+        # host-sync: host child metadata (python ints); no device value
         supports = np.asarray([c.support for c in children], np.int32)
         # The children were materialised in the representation the
         # parent committed to at ITS make_class time; decide the
@@ -462,6 +464,7 @@ class BitmapMiner:
         rep = parent.payload
         return ClassNode(
             itemsets=[c.itemset for c in children],
+            # host-sync: host child metadata; no device value touched
             rows=np.asarray([c.row for c in children], np.int32),
             supports=supports,
             representation=rep,
@@ -527,9 +530,12 @@ class BitmapMiner:
         "diff") and ``alive`` marks pairs that survived ES."""
         stats = self._stats
         cnt, blocks, alive = raw
-        cnt = np.asarray(cnt[:n])
-        blocks = np.asarray(blocks[:n])
-        alive = np.asarray(alive[:n])
+        # host-sync: the audited group-retirement readback (PR 7) — one
+        # deliberate d2h per retired dispatch, deferred via the handle
+        with host_sync("group-retirement accounting readback"):
+            cnt = np.asarray(cnt[:n])
+            blocks = np.asarray(blocks[:n])
+            alive = np.asarray(alive[:n])
         stats.word_ops += int(blocks.sum()) * self.block_words
         if self.early_stop:
             # Attribution: a dead pair that did at most one (charged)

@@ -94,6 +94,8 @@ from typing import (Any, Deque, Dict, Hashable, List, NamedTuple,
 
 import numpy as np
 
+from repro.core.guards import device_purity_guard
+
 
 @dataclass
 class EngineAccounting:
@@ -332,6 +334,15 @@ class FrontierScheduler:
     # -- main loop -----------------------------------------------------------
 
     def run(self, root: ClassNode) -> None:
+        # Runtime half of the DL001 contract (ISSUE 10): the whole
+        # mining loop runs under the device->host transfer guard, so
+        # any readback not routed through an annotated host_sync()
+        # escape raises on accelerator backends (inert on CPU, where
+        # d2h is zero-copy — there the static rule enforces).
+        with device_purity_guard():
+            self._run(root)
+
+    def _run(self, root: ClassNode) -> None:
         self.push(root)
         ring = self._ring
         while self._stack or ring:
@@ -477,6 +488,7 @@ class FrontierScheduler:
             m = len(klass.itemsets)
             ia, ib = np.triu_indices(m, 1)
             for key, col in self.client.pair_columns(klass, ia, ib).items():
+                # host-sync: protocol guarantees host np operand columns
                 cols_l.setdefault(key, []).append(np.asarray(col))
             meta.extend((ci, int(a), int(b)) for a, b in zip(ia, ib, strict=True))
         cols = {k: np.concatenate(v) for k, v in cols_l.items()}
@@ -484,6 +496,7 @@ class FrontierScheduler:
         if key_fn is not None and len(meta) > 1:
             key = key_fn(cols)
             if key is not None:
+                # host-sync: sort key is a host np vector by protocol
                 order = np.argsort(np.asarray(key), kind="stable")
                 cols = {k: c[order] for k, c in cols.items()}
                 meta = [meta[int(i)] for i in order]

@@ -48,6 +48,7 @@ from typing import Any, Dict, FrozenSet, Hashable, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.guards import host_sync
 from repro.core.oracle import PPCTree, MiningStats
 from repro.core.frontier import (Child, ClassNode, EngineAccounting,
                                  FrontierScheduler)
@@ -110,16 +111,22 @@ class PendingMergeResult:
         pool, stats = miner._pool, miner._stats
         n = self._n
         out_slot, child_len, support, cmps, checks, alive = self._raw
-        child_len = np.asarray(child_len[:n])
-        support = np.asarray(support[:n])
-        alive = np.asarray(alive[:n])
-        stats.comparisons += int(np.asarray(cmps[:n]).sum())
+        # host-sync: the audited group-retirement readback (PR 7) — one
+        # deliberate d2h per retired merge dispatch, deferred via the
+        # handle so in-flight groups overlap
+        with host_sync("group-retirement accounting readback"):
+            child_len = np.asarray(child_len[:n])
+            support = np.asarray(support[:n])
+            alive = np.asarray(alive[:n])
+            cmps_total = int(np.asarray(cmps[:n]).sum())
+            checks_total = int(np.asarray(checks[:n]).sum())
+        stats.comparisons += cmps_total
         if miner.early_stop:
             # One ES bound evaluation per skipped V code — exactly the
             # oracle's es_checks, and aborts are only attributed when
             # the guard was actually armed (the non-ES merge must
             # report zero deaths).
-            stats.es_checks += int(np.asarray(checks[:n]).sum())
+            stats.es_checks += checks_total
             stats.es_aborts += int((~alive).sum())
 
         freq = support >= miner._minsup  # aborted pairs report support 0
@@ -226,6 +233,7 @@ class DevicePrePost:
         for it in order_asc:
             out[frozenset((it,))] = tree.item_support[it]
             stats.nodes += 1
+            # host-sync: pack-time host PPC-tree N-lists; no device value
             arrays.append(np.asarray(tree.nlists[it], np.int32).reshape(-1, 3))
 
         pool = NListPool(capacity=max(
@@ -235,6 +243,7 @@ class DevicePrePost:
             pool.write_rows(rows, arrays)
         root = ClassNode(
             itemsets=[(it,) for it in order_asc],
+            # host-sync: pack-time host metadata; no device value touched
             rows=np.asarray(rows, np.int32),
             supports=np.asarray([tree.item_support[it] for it in order_asc],
                                 np.int32),
@@ -351,6 +360,7 @@ class DevicePrePost:
         del parent
         return ClassNode(
             itemsets=[c.itemset for c in children],
+            # host-sync: host child metadata; no device value touched
             rows=np.asarray([c.row for c in children], np.int32),
             supports=np.asarray([c.support for c in children], np.int32),
             payload=np.asarray([c.extra for c in children], np.int32))

@@ -69,6 +69,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.guards import host_sync
 from repro.core.bitmap import (NL_LEN_BUCKETS, nl_pad_len, popcount32_np,
                                suffix_popcounts)
 
@@ -193,6 +194,7 @@ class DeviceRowStore:
         """Pop ``k`` free slots (int32), growing the slab if needed."""
         if len(self._free) < k:
             self._grow(self.n_live + k)
+        # host-sync: host-side free-list pop; no device value touched
         slots = np.asarray([self._free.pop() for _ in range(k)], np.int32)
         self.peak_live = max(self.peak_live, self.n_live)
         return slots
@@ -249,6 +251,7 @@ class DeviceRowStore:
 
         old_cap = self.capacity
         free_mask = np.zeros(old_cap, bool)
+        # host-sync: host-side free-list mask; no device value touched
         free_mask[np.asarray(self._free, np.int64)] = True
         live = np.nonzero(~free_mask)[0].astype(np.int32)
         n_live = int(live.size)
@@ -412,9 +415,11 @@ class NListPool:
         self._row_len[int(row)] = int(length)
 
     def offsets(self, rows: Sequence[int]) -> np.ndarray:
+        # host-sync: host extent-table lookup; no device value touched
         return np.asarray([self._row_off[int(r)] for r in rows], np.int32)
 
     def lengths(self, rows: Sequence[int]) -> np.ndarray:
+        # host-sync: host extent-table lookup; no device value touched
         return np.asarray([self._row_len[int(r)] for r in rows], np.int32)
 
     def write_rows(self, rows: Sequence[int],
@@ -425,6 +430,7 @@ class NListPool:
             np.arange(self._row_off[int(r)],
                       self._row_off[int(r)] + len(a), dtype=np.int64)
             for r, a in zip(rows, code_arrays, strict=True)])
+        # host-sync: pack-time host staging for the one h2d scatter below
         vals = np.concatenate([np.asarray(a, np.int32).reshape(-1, 3)
                                for a in code_arrays])
         self.codes = self.codes.at[jnp.asarray(idx)].set(jnp.asarray(vals))
@@ -434,7 +440,10 @@ class NListPool:
         mining hot path never materialises N-lists on host)."""
         off = self._row_off[int(row)]
         ln = self._row_len[int(row)]
-        return np.asarray(self.codes[off:off + ln])
+        # host-sync: genuine d2h readback, tests/debug only — the
+        # mining hot path never calls read_row
+        with host_sync("test/debug N-list readback"):
+            return np.asarray(self.codes[off:off + ln])
 
     def _grow(self, need: int) -> None:
         old = self.capacity

@@ -31,6 +31,16 @@ harness call these wrappers directly with arbitrary widths; the
 discipline is the engines' contract, enforced by their use of
 ``bucket_pad``.)
 
+Static-arg audit (ISSUE 10, rule DL003): every ``static_argnames``
+entry in this module is a *bounded* static — ``mode`` / ``backend`` /
+``early_stop`` are two- or three-valued enums fixed per engine run,
+and ``lu`` / ``lv`` are gather widths already quantized through
+``nl_pad_len`` onto ``NL_LEN_BUCKETS`` (so the value set is the bucket
+table, not the data).  None is fed from a per-call-varying scalar —
+that was exactly the PR 5 ``es_minsup`` bug (a traced threshold made
+static doubled the cache and cost 1.17 s -> 0.04 s when fixed), and
+``tools/devicelint`` now flags the pattern instead of reviewers.
+
 Donation & pipelining (ISSUE 7): ``screen_and_intersect`` /
 ``screen_and_diff`` donate the rows/suffix slabs and ``nlist_scatter``
 donates the codes slab.  The engines may keep several dispatches in
@@ -442,7 +452,8 @@ def _compact_codes_impl(codes, perm, *, backend):
 def compact_codes(codes, perm, *, backend: str = "auto") -> jnp.ndarray:
     """N-list pool compaction: repack live extents to the front of a
     fresh slab in ONE fused device dispatch (``perm`` carries the
-    per-code source index; -1 = zero fill)."""
+    per-code source index; -1 = zero fill).  Bit-exact vs
+    ``ref.compact_gather_ref`` on both backends."""
     b = _resolve(backend)
     return _compact_codes_impl(codes, jnp.asarray(perm, jnp.int32),
                                backend=b)

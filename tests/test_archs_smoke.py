@@ -181,5 +181,5 @@ def test_fim_smoke_mining_round_single_device():
 def test_all_assigned_archs_have_smoke_and_cells():
     from repro.configs import ASSIGNED_ARCHS, all_cells
     assert len(ASSIGNED_ARCHS) == 10
-    cells = [c for c in all_cells(include_fim=False)]
+    cells = list(all_cells(include_fim=False))
     assert len(cells) == 40     # 10 archs x 4 shapes each

@@ -9,6 +9,7 @@ from repro.core.bitmap import (pack_tidlists, suffix_popcounts_np,
                                popcount32_np, unpack_row)
 from repro.kernels import ops
 from repro.kernels.ref import (bitmap_intersect_es_ref, bitmap_diff_es_ref,
+                               bitmap_intersect_full_ref, bitmap_count_ref,
                                flash_attention_ref, embedding_bag_ref,
                                screen_pairs_ref, screen_and_intersect_ref,
                                screen_and_diff_ref)
@@ -70,6 +71,33 @@ def test_bitmap_kernel_es_aborts_and_freezes():
     for i in range(16):
         if blocks[i] < 6:
             assert not Z[i, blocks[i]:].any()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("mode", ["and", "andnot"])
+def test_full_intersect_and_count_match_refs(backend, mode):
+    """DL002 pins for the no-ES dispatches: ``ops.bitmap_intersect_full``
+    vs ``bitmap_intersect_full_ref`` and ``ops.bitmap_count`` vs
+    ``bitmap_count_ref``, cross-checked against a numpy oracle (the
+    pallas count path reuses the ES kernel with minsup=0)."""
+    rng = np.random.default_rng(7)
+    U = _random_bitmaps(rng, 5, 3, 8, density=0.3)
+    V = _random_bitmaps(rng, 5, 3, 8, density=0.3)
+    expect = (U & V) if mode == "and" else (U & ~V)
+    expect_cnt = popcount32_np(expect).reshape(5, -1).sum(1)
+
+    Z, cnt = ops.bitmap_intersect_full(U, V, mode=mode, backend=backend)
+    rZ, rcnt = bitmap_intersect_full_ref(U, V, mode=mode)
+    assert np.array_equal(np.asarray(Z), expect)
+    assert np.array_equal(np.asarray(Z), np.asarray(rZ))
+    assert np.array_equal(np.asarray(cnt), expect_cnt)
+    assert np.array_equal(np.asarray(cnt), np.asarray(rcnt))
+
+    if mode == "and":
+        c = ops.bitmap_count(U, V, backend=backend)
+        assert np.array_equal(np.asarray(c), expect_cnt)
+        assert np.array_equal(np.asarray(c),
+                              np.asarray(bitmap_count_ref(U, V)))
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])

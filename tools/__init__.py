@@ -1,0 +1,2 @@
+# Makes ``tools`` importable so ``python -m tools.devicelint`` works
+# from the repo root (and so tests can import the rule engine).

@@ -58,6 +58,17 @@ REQUIRED_TERMS = {
         "psum",                  # reduction axes must stay documented
         "chunk_quantum",         # the scheduler alignment contract
         "all_gather",            # scatter locality story
+        # Device-purity contract (ISSUE 10): every devicelint rule code
+        # plus the annotation grammar and the runtime guard entry points
+        # must stay documented.
+        "DL001",
+        "DL002",
+        "DL003",
+        "DL004",
+        "# host-sync:",
+        "device_purity_guard",
+        "host_sync",
+        "--update-baseline",
     ],
     "benchmarks/README.md": [
         "--full",

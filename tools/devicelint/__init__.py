@@ -1,0 +1,32 @@
+"""devicelint — repo-specific static analysis for device-purity contracts.
+
+Every speed win since PR 1 rests on invariants nothing machine-checked
+until now: fused dispatches must not force host syncs outside the
+audited readback points, every public op in ``kernels/ops.py`` must be
+pinned by a ``*_ref`` twin in ``kernels/ref.py``, traced-vs-static
+argument choices must not silently multiply jit caches (the PR 5
+``es_minsup`` bug), and the PR 8 mesh contract forbids ``psum`` over
+the ``cls`` axis.  devicelint turns those review-memory contracts into
+AST rules that fail CI.
+
+Rules (see ``rules.py`` and docs/ARCHITECTURE.md "Device-purity
+contract"):
+
+* **DL001** host-sync: host-forcing operations in ``core/`` /
+  ``kernels/`` without a ``# host-sync: <why>`` annotation.
+* **DL002** ref-pinning: public dispatch in ``kernels/ops.py`` without
+  a ``*_ref`` twin in ``kernels/ref.py`` + a test referencing both.
+* **DL003** retrace hazards: uncached ``jax.jit`` in loops/functions,
+  bogus or unhashable ``static_argnames``.
+* **DL004** mesh-axis discipline: collectives over undeclared axes;
+  ``psum`` over the ``cls`` axis.
+
+Usage: ``python -m tools.devicelint src tests benchmarks`` (exit 1 on
+any finding not covered by the committed baseline).  Pure stdlib — no
+dependency beyond ``ast``.
+"""
+
+from tools.devicelint.engine import (  # noqa: F401
+    Finding, lint_paths, lint_source, load_baseline, diff_baseline,
+)
+from tools.devicelint import rules  # noqa: F401

@@ -1,0 +1,69 @@
+"""CLI: ``python -m tools.devicelint [paths...]``.
+
+Exit 0 when every finding is covered by the committed baseline and no
+baseline entry is stale; exit 1 otherwise.  ``--update-baseline``
+rewrites the baseline to the current findings (shrink-only in spirit:
+review the diff — the ratchet exists so new debt is a decision, not an
+accident).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.devicelint.engine import (
+    DEFAULT_BASELINE, diff_baseline, lint_paths, load_baseline,
+    save_baseline,
+)
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks"]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.devicelint",
+        description="repo-specific device-purity static analysis "
+                    "(rules DL001-DL004)")
+    ap.add_argument("paths", nargs="*", default=DEFAULT_PATHS,
+                    help="files/dirs to lint (repo-relative; default: "
+                         "%(default)s)")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline JSON (default: %(default)s)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    args = ap.parse_args(argv)
+
+    findings = lint_paths(list(args.paths))
+
+    if args.update_baseline:
+        save_baseline(findings, args.baseline)
+        print(f"devicelint: baseline updated with {len(findings)} "
+              f"finding(s) -> {args.baseline}", file=sys.stderr)
+        return 0
+
+    baseline = [] if args.no_baseline else load_baseline(args.baseline)
+    new, stale = diff_baseline(findings, baseline)
+
+    for f in new:
+        print(f"{f}")
+    for e in stale:
+        print(f"{e.get('path')}:{e.get('line')}: {e.get('rule')} "
+              f"[stale baseline entry — finding no longer present; "
+              f"run --update-baseline to shrink] {e.get('message')}")
+
+    if new or stale:
+        print(f"devicelint: {len(new)} new finding(s), {len(stale)} "
+              f"stale baseline entr(ies) — failing", file=sys.stderr)
+        return 1
+    carried = len(findings)
+    print(f"devicelint ok: 0 new findings "
+          f"({carried} carried in baseline)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

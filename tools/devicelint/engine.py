@@ -1,0 +1,196 @@
+"""devicelint rule framework: file index, findings, baseline ratchet.
+
+The engine is deliberately tiny — stdlib ``ast`` only:
+
+* ``SourceFile`` parses one file once and pre-extracts the
+  ``# host-sync: <why>`` annotation map (rules share it).
+* ``RepoIndex`` holds every parsed file so cross-file rules (DL002
+  ref-pinning needs ops.py + ref.py + tests/) see the whole repo.
+* A rule is a function ``(RepoIndex) -> list[Finding]`` registered with
+  the ``@rule`` decorator; ``lint_paths`` runs them all.
+* The baseline ratchet mirrors the bench-gate workflow: findings are
+  fingerprinted by ``(rule, path, stripped source line)`` — stable
+  under unrelated line drift — and compared as multisets against the
+  committed ``baseline.json``.  NEW findings fail; STALE baseline
+  entries (debt that got fixed) also fail until the baseline is
+  re-shrunk with ``--update-baseline``, so the ratchet only tightens.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent.parent
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+# Annotation grammar (docs/ARCHITECTURE.md "Device-purity contract").
+# Case-insensitive, and tolerant of a parenthesised qualifier so PR 7's
+# existing ``# HOST-SYNC (load-bearing): why`` audit comments count.
+_ANNOT_RE = re.compile(r"#\s*host-sync\b[^:#]*:\s*(\S.*)", re.IGNORECASE)
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str          # "DL001" .. "DL004"
+    path: str          # repo-relative posix path
+    line: int          # 1-based line of the offending node
+    message: str
+    snippet: str       # stripped source line — fingerprint component
+
+    @property
+    def fingerprint(self) -> tuple:
+        # Line numbers are display-only: renames/reorders above a
+        # finding must not churn the baseline.
+        return (self.rule, self.path, self.snippet)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class SourceFile:
+    """One parsed python file plus its host-sync annotation map."""
+
+    def __init__(self, path: Path, rel: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.text = text
+        self.lines = text.splitlines()
+        try:
+            self.tree = ast.parse(text)
+        except SyntaxError:
+            self.tree = None     # rules skip unparsable files
+        # line (1-based) -> why-string for every annotated line
+        self.annotations: dict[int, str] = {}
+        for i, ln in enumerate(self.lines, start=1):
+            m = _ANNOT_RE.search(ln)
+            if m:
+                self.annotations[i] = m.group(1).strip()
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def annotated(self, node: ast.AST) -> bool:
+        """True if the statement carrying ``node`` has a ``# host-sync:``
+        annotation on the line above it, on its first line, or on any
+        line the (possibly multi-line) statement spans."""
+        lo = getattr(node, "lineno", 0)
+        hi = getattr(node, "end_lineno", lo) or lo
+        return any(ln in self.annotations for ln in range(lo - 1, hi + 1))
+
+
+class RepoIndex:
+    def __init__(self, root: Path, files: list[SourceFile]):
+        self.root = root
+        self.files = files
+        self.by_rel = {f.rel: f for f in files}
+
+    def get(self, rel: str) -> SourceFile | None:
+        return self.by_rel.get(rel)
+
+    def matching(self, prefix: str) -> list[SourceFile]:
+        return [f for f in self.files if f.rel.startswith(prefix)]
+
+
+# --------------------------------------------------------------------------
+# rule registry
+# --------------------------------------------------------------------------
+
+RULES: dict[str, tuple[str, object]] = {}   # code -> (name, fn)
+
+
+def rule(code: str, name: str):
+    def deco(fn):
+        RULES[code] = (name, fn)
+        return fn
+    return deco
+
+
+def build_index(paths: list[str], root: Path = REPO) -> RepoIndex:
+    seen: dict[str, SourceFile] = {}
+    for p in paths:
+        base = (root / p) if not Path(p).is_absolute() else Path(p)
+        candidates = [base] if base.is_file() else sorted(base.rglob("*.py"))
+        for f in candidates:
+            if "__pycache__" in f.parts or f.suffix != ".py":
+                continue
+            try:
+                rel = f.resolve().relative_to(root).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            if rel not in seen:
+                seen[rel] = SourceFile(
+                    f, rel, f.read_text(encoding="utf-8"))
+    return RepoIndex(root, list(seen.values()))
+
+
+def lint_index(index: RepoIndex,
+               only: set[str] | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for code, (_, fn) in sorted(RULES.items()):
+        if only and code not in only:
+            continue
+        findings.extend(fn(index))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_paths(paths: list[str], root: Path = REPO,
+               only: set[str] | None = None) -> list[Finding]:
+    # Rules register on import; keep this import local so engine.py has
+    # no import-time dependency on rules.py (tests import either alone).
+    from tools.devicelint import rules  # noqa: F401
+    return lint_index(build_index(paths, root), only=only)
+
+
+def lint_source(text: str, rel: str = "src/repro/core/snippet.py",
+                only: set[str] | None = None,
+                extra: dict[str, str] | None = None) -> list[Finding]:
+    """Lint in-memory sources (the fixture-test entry point).
+
+    ``extra`` maps additional rel-paths to sources so cross-file rules
+    (DL002) can be exercised hermetically.
+    """
+    from tools.devicelint import rules  # noqa: F401
+    files = [SourceFile(Path(rel), rel, text)]
+    for r, t in (extra or {}).items():
+        files.append(SourceFile(Path(r), r, t))
+    return lint_index(RepoIndex(REPO, files), only=only)
+
+
+# --------------------------------------------------------------------------
+# baseline ratchet
+# --------------------------------------------------------------------------
+
+def load_baseline(path: Path = DEFAULT_BASELINE) -> list[dict]:
+    if not path.exists():
+        return []
+    return json.loads(path.read_text(encoding="utf-8"))
+
+
+def save_baseline(findings: list[Finding],
+                  path: Path = DEFAULT_BASELINE) -> None:
+    entries = [{"rule": f.rule, "path": f.path, "line": f.line,
+                "snippet": f.snippet, "message": f.message}
+               for f in findings]
+    path.write_text(json.dumps(entries, indent=2) + "\n", encoding="utf-8")
+
+
+def diff_baseline(findings: list[Finding], baseline: list[dict]
+                  ) -> tuple[list[Finding], list[dict]]:
+    """Multiset diff: (new findings, stale baseline entries)."""
+    remaining = [dict(e) for e in baseline]
+    new: list[Finding] = []
+    for f in findings:
+        for e in remaining:
+            if (e.get("rule"), e.get("path"),
+                    e.get("snippet")) == f.fingerprint:
+                remaining.remove(e)
+                break
+        else:
+            new.append(f)
+    return new, remaining

@@ -1,0 +1,451 @@
+"""devicelint rules DL001-DL004 (see docs/ARCHITECTURE.md for the
+user-facing contract table; this module is the implementation).
+
+Scope conventions:
+
+* DL001 guards the device-resident engine layers only —
+  ``src/repro/core/`` + ``src/repro/kernels/`` minus the two modules
+  that are host-side *by design* (``core/oracle.py``, the pure-python
+  reference miners, and ``core/cli.py``, user I/O).
+* DL002 reads ``kernels/ops.py`` + ``kernels/ref.py`` + ``tests/``
+  together (cross-file rule).
+* DL003 applies to everything under ``src/`` — retrace hazards are
+  costly wherever they occur; debt outside core/kernels is carried in
+  the committed baseline rather than annotated away.
+* DL004 applies to any scanned file that uses collectives.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.devicelint.engine import Finding, RepoIndex, SourceFile, rule
+
+DL001_SCOPE = ("src/repro/core/", "src/repro/kernels/")
+DL001_EXEMPT = ("src/repro/core/oracle.py", "src/repro/core/cli.py")
+
+OPS_REL = "src/repro/kernels/ops.py"
+REF_REL = "src/repro/kernels/ref.py"
+
+# jax.lax collectives that REDUCE over an axis (forbidden on ``cls``
+# per the PR 8 invariance contract) vs. ones that only rearrange
+# (``all_gather`` along cls is exactly how survivor metadata travels).
+_REDUCING = {"psum", "pmean", "pmax", "pmin", "psum_scatter"}
+_COLLECTIVES = _REDUCING | {"all_gather", "all_to_all", "ppermute",
+                            "axis_index", "pshuffle"}
+# Call names whose string arguments declare mesh axes.
+_AXIS_DECLS = {"P", "PartitionSpec", "Mesh", "make_mesh",
+               "make_mining_mesh", "AxisNames"}
+
+
+def _mentions_jnp(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == "jnp"
+               for n in ast.walk(node))
+
+
+def _call_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression ('jax.lax.psum')."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+# --------------------------------------------------------------------------
+# DL001 — host-sync discipline
+# --------------------------------------------------------------------------
+
+_COMPOUND = (ast.If, ast.While, ast.For, ast.AsyncFor, ast.With,
+             ast.AsyncWith, ast.Try, ast.FunctionDef,
+             ast.AsyncFunctionDef, ast.ClassDef)
+
+
+def _is_host_sync_with(node: ast.With | ast.AsyncWith) -> bool:
+    """``with host_sync("why"):`` / ``with guards.host_sync("why"):`` —
+    the runtime escape doubles as the annotation, provided the why
+    string is a non-empty literal."""
+    for item in node.items:
+        c = item.context_expr
+        if isinstance(c, ast.Call) \
+                and _dotted(c.func).rsplit(".", 1)[-1] == "host_sync" \
+                and c.args and isinstance(c.args[0], ast.Constant) \
+                and isinstance(c.args[0].value, str) and c.args[0].value:
+            return True
+    return False
+
+
+@rule("DL001", "host-sync")
+def dl001_host_sync(index: RepoIndex) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in index.files:
+        if sf.tree is None or sf.rel in DL001_EXEMPT:
+            continue
+        if not sf.rel.startswith(DL001_SCOPE):
+            continue
+        _dl001_scan(sf, out)
+    return out
+
+
+def _dl001_scan(sf: SourceFile, out: list[Finding]) -> None:
+    def suppressed(lo: int, hi: int) -> bool:
+        return any(ln in sf.annotations for ln in range(lo - 1, hi + 1))
+
+    def visit(node: ast.AST, span, escaped: bool) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)) \
+                and _is_host_sync_with(node):
+            escaped = True
+        # Simple (non-compound) statements set the suppression span:
+        # an annotation anywhere in the statement or on the line above
+        # covers every hit inside it — multi-line calls keep working.
+        if isinstance(node, ast.stmt) \
+                and not isinstance(node, _COMPOUND):
+            span = (node.lineno, node.end_lineno or node.lineno)
+        hit = _dl001_hit(node)
+        if hit:
+            if isinstance(node, (ast.If, ast.While)):
+                lo, hi = node.lineno, (node.test.end_lineno
+                                       or node.lineno)
+            elif span is not None:
+                lo, hi = span
+            else:
+                lo = node.lineno
+                hi = getattr(node, "end_lineno", lo) or lo
+            if not escaped and not suppressed(lo, hi):
+                out.append(Finding(
+                    "DL001", sf.rel, node.lineno,
+                    hit + " — annotate `# host-sync: <why>` or keep "
+                    "it on-device", sf.snippet(node.lineno)))
+        for child in ast.iter_child_nodes(node):
+            visit(child, span, escaped)
+
+    visit(sf.tree, None, False)
+
+
+def _dl001_hit(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            recv = _dotted(f.value)
+            if f.attr in ("asarray", "array") and recv in ("np", "numpy"):
+                return (f"np.{f.attr}(...) forces a host copy (and a "
+                        "device sync when fed a device value)")
+            if f.attr == "device_get" and recv == "jax":
+                return "jax.device_get(...) is a blocking device->host sync"
+            if f.attr == "block_until_ready":
+                return ".block_until_ready() blocks the dispatch pipeline"
+            if f.attr == "item":
+                return ".item() synchronously reads a scalar off device"
+        if isinstance(f, ast.Name) and f.id in ("int", "float") and any(
+                _mentions_jnp(a) for a in node.args):
+            return (f"{f.id}() on a jnp value synchronously reads a "
+                    "scalar off device")
+    if isinstance(node, (ast.If, ast.While)) and _mentions_jnp(node.test):
+        return ("branching on a jnp value forces __bool__, a blocking "
+                "device->host sync (and a trace error under jit)")
+    return None
+
+
+# --------------------------------------------------------------------------
+# DL002 — ref-pinning
+# --------------------------------------------------------------------------
+
+def _public_defs(sf: SourceFile) -> list[ast.FunctionDef]:
+    if sf.tree is None:
+        return []
+    return [n for n in sf.tree.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_")]
+
+
+def _resolve_ref_twin(fn: ast.FunctionDef, ref_names: set) -> str | None:
+    """ops-fn -> ref-twin name: direct ``{name}_ref``, factory
+    ``make_`` stripped, or a ``*_ref`` the docstring pins it to."""
+    for cand in (fn.name + "_ref",
+                 fn.name.removeprefix("make_") + "_ref"):
+        if cand in ref_names:
+            return cand
+    doc = ast.get_docstring(fn) or ""
+    import re
+    for m in re.findall(r"\b(\w+_ref)\b", doc):
+        if m in ref_names:
+            return m
+    return None
+
+
+@rule("DL002", "ref-pinning")
+def dl002_ref_pinning(index: RepoIndex) -> list[Finding]:
+    ops = index.get(OPS_REL)
+    ref = index.get(REF_REL)
+    if ops is None:
+        return []      # not linting the kernels layer in this run
+    ref_names = {f.name for f in _public_defs(ref)} if ref else set()
+    tests = index.matching("tests/")
+    out: list[Finding] = []
+    for fn in _public_defs(ops):
+        twin = _resolve_ref_twin(fn, ref_names)
+        if twin is None:
+            out.append(Finding(
+                "DL002", ops.rel, fn.lineno,
+                f"public dispatch `{fn.name}` has no `*_ref` twin in "
+                f"kernels/ref.py (add `{fn.name}_ref` or pin one in the "
+                "docstring)", ops.snippet(fn.lineno)))
+            continue
+        if tests and not any(fn.name in t.text and twin in t.text
+                             for t in tests):
+            out.append(Finding(
+                "DL002", ops.rel, fn.lineno,
+                f"no test file references both `{fn.name}` and its ref "
+                f"twin `{twin}` — the pin is unverified",
+                ops.snippet(fn.lineno)))
+    return out
+
+
+# --------------------------------------------------------------------------
+# DL003 — retrace hazards
+# --------------------------------------------------------------------------
+
+def _is_jit_call(node: ast.Call) -> bool:
+    return _dotted(node.func) in ("jax.jit", "jit")
+
+
+def _jit_decoration(fn: ast.FunctionDef):
+    """(static_argnames tuple, found) from @jax.jit /
+    @functools.partial(jax.jit, static_argnames=...) decorators."""
+    for dec in fn.decorator_list:
+        if _dotted(dec) in ("jax.jit", "jit"):
+            return (), True
+        if isinstance(dec, ast.Call):
+            target = dec
+            if _dotted(dec.func) in ("functools.partial", "partial") \
+                    and dec.args and isinstance(dec.args[0], ast.expr) \
+                    and _dotted(dec.args[0]) in ("jax.jit", "jit"):
+                pass                      # partial(jax.jit, ...) form
+            elif _is_jit_call(dec):
+                pass                      # @jax.jit(...) form
+            else:
+                continue
+            statics = []
+            for kw in target.keywords:
+                if kw.arg == "static_argnames":
+                    statics = [e.value for e in ast.walk(kw.value)
+                               if isinstance(e, ast.Constant)
+                               and isinstance(e.value, str)]
+            return tuple(statics), True
+    return (), False
+
+
+def _is_cached(fn: ast.FunctionDef) -> bool:
+    return any(_dotted(d if not isinstance(d, ast.Call) else d.func)
+               in ("functools.lru_cache", "lru_cache",
+                   "functools.cache", "cache")
+               for d in fn.decorator_list)
+
+
+@rule("DL003", "retrace-hazard")
+def dl003_retrace(index: RepoIndex) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in index.files:
+        if sf.tree is None or not sf.rel.startswith("src/"):
+            continue
+        out.extend(_dl003_file(sf))
+    return out
+
+
+def _dl003_file(sf: SourceFile) -> list[Finding]:
+    out: list[Finding] = []
+    statics_by_fn: dict[str, tuple] = {}
+
+    # (a) decorated jits: static_argnames must name real params, and
+    # named params must not carry unhashable defaults.
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        statics, found = _jit_decoration(node)
+        if not found:
+            continue
+        statics_by_fn[node.name] = statics
+        a = node.args
+        params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        pos = a.posonlyargs + a.args
+        defaults = dict(zip([p.arg for p in pos[len(pos)
+                                               - len(a.defaults):]],
+                            a.defaults, strict=True))
+        defaults.update(zip([p.arg for p in a.kwonlyargs],
+                            a.kw_defaults, strict=True))
+        for s in statics:
+            if s not in params:
+                out.append(Finding(
+                    "DL003", sf.rel, node.lineno,
+                    f"static_argnames names `{s}` which is not a "
+                    f"parameter of `{node.name}` — the static is dead "
+                    "and the real arg is traced", sf.snippet(node.lineno)))
+            elif isinstance(defaults.get(s), (ast.List, ast.Dict, ast.Set)):
+                out.append(Finding(
+                    "DL003", sf.rel, node.lineno,
+                    f"static arg `{s}` of `{node.name}` defaults to an "
+                    "unhashable literal — every call with the default "
+                    "raises or retraces", sf.snippet(node.lineno)))
+
+    # (b) jax.jit constructed inside loops (retrace every iteration)
+    # or inside uncached functions (retrace every call).
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.loop_depth = 0
+            self.fn_stack: list[ast.FunctionDef] = []
+
+        def visit_For(self, n):
+            self.loop_depth += 1
+            self.generic_visit(n)
+            self.loop_depth -= 1
+        visit_While = visit_For
+        visit_AsyncFor = visit_For
+
+        def visit_FunctionDef(self, n):
+            self.fn_stack.append(n)
+            saved, self.loop_depth = self.loop_depth, 0
+            self.generic_visit(n)
+            self.loop_depth = saved
+            self.fn_stack.pop()
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_Call(self, n):
+            if _is_jit_call(n):
+                if self.loop_depth:
+                    out.append(Finding(
+                        "DL003", sf.rel, n.lineno,
+                        "jax.jit(...) constructed inside a loop — a "
+                        "fresh cache per iteration, retraces every time",
+                        sf.snippet(n.lineno)))
+                elif self.fn_stack and not any(
+                        _is_cached(f) for f in self.fn_stack):
+                    out.append(Finding(
+                        "DL003", sf.rel, n.lineno,
+                        "jax.jit(...) constructed inside an uncached "
+                        "function — a fresh jit cache per call; hoist "
+                        "to module scope or lru_cache the factory",
+                        sf.snippet(n.lineno)))
+            self.generic_visit(n)
+
+    V().visit(sf.tree)
+
+    # (c) per-call-varying statics: a call site feeding int()/float()
+    # (a freshly computed scalar) into a known static kwarg of a jitted
+    # function defined in this file — the PR 5 `es_minsup` bug class.
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dotted(node.func).rsplit(".", 1)[-1]
+        statics = statics_by_fn.get(callee)
+        if not statics:
+            continue
+        for kw in node.keywords:
+            if kw.arg in statics and isinstance(kw.value, ast.Call) \
+                    and isinstance(kw.value.func, ast.Name) \
+                    and kw.value.func.id in ("int", "float"):
+                out.append(Finding(
+                    "DL003", sf.rel, node.lineno,
+                    f"static arg `{kw.arg}` of `{callee}` is fed a "
+                    f"freshly cast {kw.value.func.id}() scalar — "
+                    "per-call-varying statics retrace on every distinct "
+                    "value (pass it traced, or bucket it)",
+                    sf.snippet(node.lineno)))
+    return out
+
+
+# --------------------------------------------------------------------------
+# DL004 — mesh-axis discipline
+# --------------------------------------------------------------------------
+
+def _axis_vocabulary(sf: SourceFile) -> set:
+    """Axis names the file declares: string constants inside mesh/spec
+    constructor calls plus string elements of ``*_axes`` / ``*axis*``
+    name assignments."""
+    vocab: set = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and _call_name(node) in _AXIS_DECLS:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Constant) and isinstance(
+                        sub.value, str):
+                    vocab.add(sub.value)
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets
+                       if isinstance(t, ast.Name)]
+            if any("axes" in t or "axis" in t for t in targets):
+                for sub in ast.walk(node.value):
+                    if isinstance(sub, ast.Constant) and isinstance(
+                            sub.value, str):
+                        vocab.add(sub.value)
+    return vocab
+
+
+def _axis_arg(call: ast.Call) -> ast.AST | None:
+    name = _call_name(call)
+    for kw in call.keywords:
+        if kw.arg in ("axis_name", "axis_names"):
+            return kw.value
+    idx = 0 if name == "axis_index" else 1
+    if len(call.args) > idx:
+        return call.args[idx]
+    return None
+
+
+@rule("DL004", "mesh-axis")
+def dl004_mesh_axes(index: RepoIndex) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in index.files:
+        if sf.tree is None or not sf.rel.startswith(("src/", "tests/",
+                                                     "benchmarks/")):
+            continue
+        vocab = None     # computed lazily, only for files w/ collectives
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if name not in _COLLECTIVES:
+                continue
+            dotted = _dotted(node.func)
+            if dotted not in (f"jax.lax.{name}", f"lax.{name}", name):
+                continue
+            axis = _axis_arg(node)
+            if axis is None:
+                continue
+            literals = [n.value for n in ast.walk(axis)
+                        if isinstance(n, ast.Constant)
+                        and isinstance(n.value, str)]
+            named = _dotted(axis)
+            # (a) the PR 8 contract: cls is a pair-sharding axis; any
+            # REDUCING collective over it double-counts pair metrics.
+            if name in _REDUCING and (
+                    "cls" in literals or "cls" in named):
+                out.append(Finding(
+                    "DL004", sf.rel, node.lineno,
+                    f"{name} over the `cls` axis — the PR 8 contract "
+                    "reduces over block axes only (all_gather along "
+                    "cls is the sanctioned move)",
+                    sf.snippet(node.lineno)))
+                continue
+            # (b) literal axis names must be declared in the file's
+            # mesh/spec vocabulary.
+            if literals:
+                if vocab is None:
+                    vocab = _axis_vocabulary(sf)
+                for lit in literals:
+                    if lit not in vocab:
+                        out.append(Finding(
+                            "DL004", sf.rel, node.lineno,
+                            f"{name} over axis '{lit}' which no mesh "
+                            "spec / axis declaration in this file "
+                            "names — undeclared collective axis",
+                            sf.snippet(node.lineno)))
+    return out
